@@ -1,0 +1,48 @@
+"""Paper Fig. 1 / Example 1: Lemma-1 bound curves for fixed k=1..5 and the
+Theorem-1 adaptive envelope (n=5, exp response times, eta=0.001, sigma^2=10,
+F(w0)-F*=100, L=2, c=1, s=10)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.theory import (
+    adaptive_bound_curve,
+    error_bound,
+    example1_system,
+    switching_times,
+)
+
+
+def run(csv_path: str | None = None):
+    sys = example1_system()
+    t0 = time.perf_counter()
+    switches = switching_times(sys)
+    grid = np.linspace(0, 6e4, 4000)
+    curves = {f"fixed_k{k}": error_bound(sys, k, grid) for k in range(1, 6)}
+    curves["adaptive"] = adaptive_bound_curve(sys, grid)
+    dt_us = (time.perf_counter() - t0) * 1e6
+
+    # validations mirroring the paper's observations
+    assert all(b >= a for a, b in zip(switches, switches[1:])), "t_k must increase"
+    for k in range(1, 6):
+        assert np.all(curves["adaptive"] <= curves[f"fixed_k{k}"] + 1e-9)
+    # early on k=1 is best; at the end the adaptive curve reaches the k=5 floor
+    assert curves["fixed_k1"][10] == min(curves[f"fixed_k{k}"][10] for k in range(1, 6))
+    assert abs(curves["adaptive"][-1] - sys.error_floor(5)) / sys.error_floor(5) < 0.05
+
+    if csv_path:
+        cols = ["t"] + sorted(curves)
+        arr = np.column_stack([grid] + [curves[c] for c in sorted(curves)])
+        np.savetxt(csv_path, arr, delimiter=",", header=",".join(cols), comments="")
+    return {
+        "name": "fig1_theory_bounds",
+        "us_per_call": dt_us,
+        "derived": ";".join(f"t_{i+1}={t:.0f}" for i, t in enumerate(switches)),
+    }
+
+
+if __name__ == "__main__":
+    print(run("results/fig1.csv"))

@@ -1,0 +1,99 @@
+"""Aggregate the dry-run matrix (results/dryrun/*.json) into the roofline
+table: per (arch x shape) the three terms, dominant bottleneck, and
+full-depth cost extrapolated from the unrolled cost4/cost8 runs."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, Optional
+
+from repro.configs import get_config
+from repro.roofline.analysis import HW
+
+RESULTS_DIR = "results/dryrun"
+
+
+def load(arch: str, shape: str, mode: str) -> Optional[dict]:
+    path = os.path.join(RESULTS_DIR, f"{arch}__{shape}__{mode}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def extrapolated_costs(arch: str, shape: str) -> Optional[Dict[str, float]]:
+    """Full-depth per-device HLO costs from the unrolled L=4 / L=8 runs:
+    cost(L) = base + L * per_layer."""
+    c4, c8 = load(arch, shape, "cost4"), load(arch, shape, "cost8")
+    if not (c4 and c8):
+        return None
+    full_l = get_config(arch).n_layers
+    out = {}
+    for key in ("hlo_flops", "hlo_bytes", "collective_bytes"):
+        per = (c8["roofline"][key] - c4["roofline"][key]) / 4.0
+        base = c4["roofline"][key] - 4.0 * per
+        out[key] = max(base + full_l * per, 0.0)
+    hw = HW()
+    out["compute_s"] = out["hlo_flops"] / hw.peak_flops
+    out["memory_s"] = out["hlo_bytes"] / hw.hbm_bw
+    out["collective_s"] = out["collective_bytes"] / hw.ici_bw
+    terms = {k: out[k] for k in ("compute_s", "memory_s", "collective_s")}
+    out["dominant"] = max(terms, key=terms.get)
+    return out
+
+
+def table_rows():
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "*__base.json"))):
+        base = json.load(open(path))
+        arch, shape = base["arch"], base["shape"]
+        ext = extrapolated_costs(arch, shape)
+        pod2 = load(arch, shape, "pod2")
+        row = {
+            "arch": arch,
+            "shape": shape,
+            "lowers_16x16": True,
+            "lowers_2x16x16": pod2 is not None,
+            "compile_s": base["compile_s"],
+            "analytic_mem_gb": base["analytic_memory"]["total_bytes"] / 1e9,
+            "fits_16gb": base["analytic_memory"]["fits_16gb"],
+            "model_flops_global": base["roofline"]["model_flops_global"],
+        }
+        if ext:
+            n_dev = base["n_devices"]
+            row.update({
+                "compute_s": ext["compute_s"],
+                "memory_s": ext["memory_s"],
+                "collective_s": ext["collective_s"],
+                "dominant": ext["dominant"],
+                "useful_flops_ratio": (
+                    base["roofline"]["model_flops_global"]
+                    / max(ext["hlo_flops"] * n_dev, 1.0)
+                ),
+            })
+        rows.append(row)
+    return rows
+
+
+def run():
+    rows = table_rows()
+    n_ok = sum(r["lowers_16x16"] and r["lowers_2x16x16"] for r in rows)
+    n_fit = sum(bool(r["fits_16gb"]) for r in rows)
+    doms = [r.get("dominant", "?") for r in rows]
+    return {
+        "name": "roofline_table",
+        "us_per_call": 0.0,
+        "derived": f"pairs={len(rows)};both_meshes_ok={n_ok};fit_16gb={n_fit};"
+                   f"compute_bound={doms.count('compute_s')};"
+                   f"memory_bound={doms.count('memory_s')};"
+                   f"collective_bound={doms.count('collective_s')}",
+    }
+
+
+if __name__ == "__main__":
+    import pprint
+
+    pprint.pprint(table_rows())
+    print(run())

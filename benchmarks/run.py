@@ -1,0 +1,39 @@
+"""Benchmark harness — one entry per paper table/figure plus the roofline
+aggregation.  Prints ``name,us_per_call,derived`` CSV."""
+
+from __future__ import annotations
+
+import os
+import sys
+import traceback
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import ablation, fig1, fig2, fig3, kernels_bench, roofline_table  # noqa: E402
+
+
+def main() -> None:
+    os.makedirs("results", exist_ok=True)
+    rows = []
+    benches = [
+        ("fig1", lambda: [fig1.run("results/fig1.csv")]),
+        ("fig2", lambda: [fig2.run("results/fig2.csv")]),
+        ("fig3", lambda: [fig3.run("results/fig3.csv")]),
+        ("ablation", lambda: [ablation.run("results/ablation.csv")]),
+        ("kernels", kernels_bench.run),
+        ("roofline", lambda: [roofline_table.run()]),
+    ]
+    for name, fn in benches:
+        try:
+            rows.extend(fn())
+        except Exception as e:  # keep the harness robust; report the failure
+            traceback.print_exc()
+            rows.append({"name": name, "us_per_call": -1.0, "derived": f"ERROR:{e}"})
+
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

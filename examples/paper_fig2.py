@@ -1,0 +1,26 @@
+"""Full reproduction of the paper's Figure 2 (adaptive vs non-adaptive
+fastest-k SGD, error vs simulated wall-clock) at the paper's scale:
+d=100, m=2000, n=50, adaptive k: 10 -> 40 in steps of 10.
+
+Writes results/fig2.csv (plot with any CSV tool).
+
+    PYTHONPATH=src python examples/paper_fig2.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import fig2  # noqa: E402
+
+
+def main():
+    os.makedirs("results", exist_ok=True)
+    out = fig2.run("results/fig2.csv")
+    print("wrote results/fig2.csv")
+    print(out["derived"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Quickstart: the paper's adaptive fastest-k SGD in ~40 lines.
+
+A master with n=20 simulated workers runs linear regression; Algorithm 1's
+Pflug test detects the transient->stationary phase transition and raises k.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.controller import FixedKController, PflugController
+from repro.core.simulate import simulate_fastest_k
+from repro.core.straggler import Exponential
+from repro.data import make_linreg_data
+
+
+def main():
+    data = make_linreg_data(jax.random.PRNGKey(0), m=400, d=20)
+    n_workers = 20
+    L = 2 * float(jnp.linalg.eigvalsh(data.X.T @ data.X / 400).max())
+    eta = 0.5 / L
+    w0 = jnp.zeros((20,))
+
+    print("== adaptive fastest-k (Algorithm 1) ==")
+    hist = simulate_fastest_k(
+        (lambda w, X, y: (X @ w - y) ** 2), w0, data.X, data.y,
+        n_workers=n_workers,
+        controller=PflugController(n_workers=n_workers, k0=2, step=4,
+                                   thresh=10, burnin=40),
+        straggler=Exponential(rate=1.0),
+        eta=eta, num_iters=8000, key=jax.random.PRNGKey(1), eval_every=1000,
+    )
+    for t, l, k in zip(hist["time"], hist["loss"], hist["k"]):
+        print(f"  sim_time={t:8.1f}  loss={l - data.f_star:10.4g}  k={k}")
+
+    print("== non-adaptive fixed k=2 (paper baseline) ==")
+    hist_f = simulate_fastest_k(
+        (lambda w, X, y: (X @ w - y) ** 2), w0, data.X, data.y,
+        n_workers=n_workers,
+        controller=FixedKController(n_workers=n_workers, k=2),
+        straggler=Exponential(rate=1.0),
+        eta=eta, num_iters=8000, key=jax.random.PRNGKey(1), eval_every=1000,
+    )
+    for t, l in zip(hist_f["time"], hist_f["loss"]):
+        print(f"  sim_time={t:8.1f}  loss={l - data.f_star:10.4g}")
+
+    adaptive_floor = hist["loss"][-1] - data.f_star
+    fixed_floor = hist_f["loss"][-1] - data.f_star
+    print(f"\nadaptive error floor {adaptive_floor:.4g} vs fixed-k=2 {fixed_floor:.4g} "
+          f"(adaptive k ended at {hist['k'][-1]})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Model / run configuration.
+
+One frozen dataclass describes every architecture in the assigned pool; each
+`src/repro/configs/<arch>.py` exports `CONFIG` (the exact published shape) and
+`smoke_config()` (a reduced variant: ≤2 layers, d_model ≤ 512, ≤4 experts) for
+CPU tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+__all__ = ["ModelConfig", "InputShape", "INPUT_SHAPES"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    activation: str = "silu_glu"  # silu_glu | sq_relu | gelu | relu_sq
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+
+    # MoE
+    n_experts: int = 0
+    moe_top_k: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    # "einsum": GShard-style one-hot dispatch/combine einsums (the classic TPU
+    # formulation; O(G*S*E*C*D) dispatch flops).  "gather": index-based
+    # dispatch/combine (§Perf hillclimb — zero dispatch flops).
+    moe_dispatch: str = "einsum"
+
+    # SSM (RWKV-6 / Mamba-in-Hymba)
+    ssm_state: int = 0  # mamba state size (hybrid); RWKV uses head_dim x head_dim
+    wkv_chunk: int = 32
+
+    # Encoder-decoder (audio)
+    encoder_layers: int = 0
+    encoder_frames: int = 1536  # stub: precomputed audio frame embeddings
+
+    # VLM
+    vlm_patches: int = 0  # stub: precomputed image patch embeddings prepended
+
+    # Attention variants
+    sliding_window: int = 0  # 0 = full causal attention
+    long_context_window: int = 4096  # window substituted for the long_500k shape
+
+    # numerics / structure
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    # Megatron-style sequence parallelism: residual stream sharded along T
+    # over the 'model' axis between blocks (saved remat checkpoints shrink by
+    # |model|; attention/MLP re-gather internally).  §Perf hillclimb.
+    seq_parallel: bool = False
+    # "naive": materialize (T,S) scores.  "blocked": online-softmax scan over
+    # key blocks — the XLA-level equivalent of the Pallas flash kernel, used
+    # so long-sequence prefill/train fits HBM on the dry-run target.
+    attention_impl: str = "naive"
+    attention_block: int = 1024
+    vocab_pad_multiple: int = 1024
+    scan_layers: bool = True  # False -> unrolled (used by dry-run cost analysis)
+    remat: bool = True  # checkpoint each block in training
+    # "full": recompute the whole block in bwd (3rd FSDP all-gather per layer).
+    # "dots": save matmul outputs (jax dots_with_no_batch_dims policy) — bwd
+    # skips the fwd matmul recompute, trading activation memory for one fewer
+    # param all-gather per layer.  §Perf lever for collective-bound archs.
+    remat_policy: str = "full"
+    use_pallas: bool = False  # route attention/wkv through the Pallas kernels
+
+    source: str = ""  # citation (paper / model card)
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return ((self.vocab_size + m - 1) // m) * m
+
+    @property
+    def q_groups(self) -> int:
+        assert self.n_heads % self.n_kv_heads == 0, (self.n_heads, self.n_kv_heads)
+        return self.n_heads // self.n_kv_heads
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}

@@ -1,0 +1,22 @@
+"""Core: the paper's contribution — adaptive fastest-k distributed SGD.
+
+Modules:
+  straggler    — iid response-time models + order statistics
+  aggregation  — fastest-k masks / per-example weights / renewal clock
+  controller   — Algorithm-1 Pflug controller, fixed-k, Theorem-1 schedule,
+                 variance-ratio (beyond paper)
+  theory       — Lemma-1 bound, Theorem-1 switching times (Example 1 / Fig 1)
+  simulate     — paper-scale host-loop simulator (Figs 2–3)
+  async_sim    — event-driven asynchronous-SGD baseline
+"""
+
+from repro.core import aggregation, controller, straggler, theory  # noqa: F401
+from repro.core.aggregation import CommModel, fastest_k_mask, iteration_time  # noqa: F401
+from repro.core.controller import (  # noqa: F401
+    FixedKController,
+    PflugController,
+    ScheduleController,
+    VarianceRatioController,
+    get_controller,
+)
+from repro.core.straggler import get_straggler_model  # noqa: F401

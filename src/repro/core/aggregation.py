@@ -1,0 +1,122 @@
+"""fastest-k gradient aggregation, expressed TPU-natively.
+
+The paper's update (eq. 2):
+
+    w_{j+1} = w_j - (eta/k) * sum_{i in R_j} grad F(S_i, w_j)
+
+where R_j is the set of the k workers with the smallest response times at
+iteration j and grad F(S_i, w) = (1/s) sum_{a in S_i} grad F(a, w).
+
+On a TPU mesh the batch is sharded along ("pod","data"): data-parallel worker
+i owns batch rows [i*s, (i+1)*s).  We therefore realize eq. (2) as the
+gradient of a *per-example weighted loss*
+
+    L(w) = sum_ell  v_ell * loss(a_ell, w),   v_ell = m_{worker(ell)} / (k*s)
+
+with m the fastest-k participation mask.  XLA's ordinary data-parallel
+gradient reduction then computes exactly  (1/k) sum_{i in R} (1/s) sum grads:
+no bespoke collective, composes with any tensor/expert parallelism, and k can
+be a *traced* value so the adaptive controller never forces a recompile.
+
+The simulated wall-clock advanced per iteration is X_(k) (the time the master
+waits for the k-th response), plus an optional affine communication model
+(a beyond-paper extension; the paper folds communication into X_i).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.straggler import StragglerModel
+
+__all__ = [
+    "CommModel",
+    "sample_worker_times",
+    "fastest_k_mask",
+    "iteration_time",
+    "per_example_weights",
+    "masked_mean_weights",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class CommModel:
+    """Affine master-side communication cost: t_comm = alpha + beta * k.
+
+    The master receives k partial-gradient messages per iteration; with a
+    single-port master the receive time grows linearly in k.  Setting
+    alpha = beta = 0 recovers the paper's model exactly.
+    """
+
+    alpha: float = 0.0
+    beta: float = 0.0
+
+    def time(self, k: jax.Array) -> jax.Array:
+        return self.alpha + self.beta * k.astype(jnp.float32)
+
+
+def sample_worker_times(model: StragglerModel, key: jax.Array, n_workers: int) -> jax.Array:
+    """iid response times for one iteration, shape (n_workers,)."""
+    return model.sample(key, n_workers)
+
+
+def fastest_k_mask(times: jax.Array, k: jax.Array) -> jax.Array:
+    """{0,1} mask of the k smallest entries of `times` (exactly k ones).
+
+    `k` may be a traced int32 scalar (1 <= k <= n) — we rank rather than
+    threshold so ties cannot produce more than k participants.
+    """
+    n = times.shape[0]
+    order = jnp.argsort(times)  # order[r] = index of rank-r worker
+    ranks = jnp.zeros((n,), dtype=jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
+    return (ranks < k).astype(times.dtype)
+
+
+def iteration_time(
+    times: jax.Array, k: jax.Array, comm: Optional[CommModel] = None
+) -> jax.Array:
+    """Simulated duration of one fastest-k iteration: X_(k) (+ comm)."""
+    sorted_times = jnp.sort(times)
+    t = jnp.take(sorted_times, k - 1)  # k-th order statistic
+    if comm is not None:
+        t = t + comm.time(k)
+    return t
+
+
+def per_example_weights(
+    mask: jax.Array, k: jax.Array, examples_per_worker: int
+) -> jax.Array:
+    """Per-example loss weights v (shape (n*s,)) realizing eq. (2).
+
+    v_ell = m_{worker(ell)} / (k * s).  Batch rows are laid out worker-major:
+    worker i owns rows [i*s, (i+1)*s) — matching the ("pod","data") sharding
+    of the leading batch axis.
+    """
+    s = examples_per_worker
+    w_worker = mask / (k.astype(mask.dtype) * s)
+    return jnp.repeat(w_worker, s, total_repeat_length=mask.shape[0] * s)
+
+
+def masked_mean_weights(mask: jax.Array, k: jax.Array) -> jax.Array:
+    """Per-worker weights m_i / k (for losses already averaged within a worker)."""
+    return mask / k.astype(mask.dtype)
+
+
+def fastest_k_iteration(
+    model: StragglerModel,
+    key: jax.Array,
+    n_workers: int,
+    k: jax.Array,
+    examples_per_worker: int,
+    comm: Optional[CommModel] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Convenience bundle: (per-example weights, iteration mask, iteration time)."""
+    times = sample_worker_times(model, key, n_workers)
+    mask = fastest_k_mask(times, k)
+    weights = per_example_weights(mask, k, examples_per_worker)
+    t = iteration_time(times, k, comm)
+    return weights, mask, t

@@ -1,0 +1,73 @@
+"""Event-driven asynchronous distributed SGD baseline (paper §V-C, ref [2]).
+
+Asynchronous SGD breaks SPMD lock-step (each worker updates the master's model
+whenever it finishes, using a gradient computed at *stale* parameters), so it
+cannot be expressed as one XLA program across the mesh.  We implement it the
+way the paper simulates it: an event-driven host loop with a priority queue of
+worker completion events; the gradient math itself is jitted.
+
+Used by benchmarks/fig3.py and examples; not part of the pod dry-run.
+"""
+
+from __future__ import annotations
+
+import heapq
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.straggler import StragglerModel
+
+__all__ = ["simulate_async_sgd"]
+
+
+def simulate_async_sgd(
+    grad_fn: Callable,  # grad_fn(params, worker_id) -> gradient pytree (over shard S_i)
+    eval_fn: Callable,  # eval_fn(params) -> scalar loss/error
+    params0,
+    n_workers: int,
+    eta: float,
+    straggler: StragglerModel,
+    total_time: float,
+    key: jax.Array,
+    eval_every: int = 10,
+) -> Dict[str, List[float]]:
+    """Fully asynchronous SGD: master applies each arriving (stale) partial
+    gradient immediately, then re-dispatches that worker from the new model.
+
+    Returns history dict with simulated 'time', 'loss', and 'updates'.
+    """
+    grad_fn = jax.jit(grad_fn, static_argnums=1)
+    eval_fn = jax.jit(eval_fn)
+
+    params = params0
+    # Each worker holds the params snapshot it is currently computing against.
+    snapshots = [params0 for _ in range(n_workers)]
+    events: list[tuple[float, int]] = []
+    key, sub = jax.random.split(key)
+    first = np.asarray(straggler.sample(sub, n_workers))
+    for i in range(n_workers):
+        heapq.heappush(events, (float(first[i]), i))
+
+    history: Dict[str, List[float]] = {"time": [], "loss": [], "updates": []}
+    t, n_updates = 0.0, 0
+    while events:
+        t, i = heapq.heappop(events)
+        if t > total_time:
+            break
+        g = grad_fn(snapshots[i], i)  # stale gradient
+        params = jax.tree.map(lambda p, gi: p - eta * gi, params, g)
+        n_updates += 1
+        # Worker i restarts from the fresh model with a fresh response time.
+        snapshots[i] = params
+        key, sub = jax.random.split(key)
+        dt = float(np.asarray(straggler.sample(sub, 1))[0])
+        heapq.heappush(events, (t + dt, i))
+
+        if n_updates % eval_every == 0:
+            history["time"].append(t)
+            history["loss"].append(float(eval_fn(params)))
+            history["updates"].append(n_updates)
+    return history

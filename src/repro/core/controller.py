@@ -1,0 +1,331 @@
+"""Adaptive-k controllers.
+
+Implements the paper's Algorithm 1 (the Pflug-style statistical test on signs
+of consecutive aggregated-gradient inner products) as a *jittable* state
+machine, plus the non-adaptive fixed-k policy, the Theorem-1 bound-optimal
+schedule (time-triggered), and a beyond-paper variance-ratio controller.
+
+All controllers share the same interface so the train step is policy-agnostic:
+
+    state  = controller.init(params_like)
+    state, k = controller.update(state, grads, sim_time)
+
+`k` is an int32 scalar *array* (traced), so changing k never recompiles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "PflugState",
+    "PflugController",
+    "FixedKController",
+    "ScheduleController",
+    "VarianceRatioController",
+]
+
+
+def _tree_dot(a, b) -> jax.Array:
+    leaves = jax.tree.map(lambda x, y: jnp.vdot(x.astype(jnp.float32), y.astype(jnp.float32)), a, b)
+    return jax.tree.reduce(jnp.add, leaves)
+
+
+def _tree_zeros_like(t):
+    return jax.tree.map(lambda x: jnp.zeros_like(x, dtype=jnp.float32), t)
+
+
+class PflugState(NamedTuple):
+    k: jax.Array  # int32 — current number of workers waited for
+    count_negative: jax.Array  # int32 — (#negative − #positive) sign events
+    count_iter: jax.Array  # int32 — iterations since last switch
+    prev_grad: Any  # pytree — ĝ_{j−1}
+    have_prev: jax.Array  # bool — first iteration has no previous gradient
+    n_switches: jax.Array  # int32 — diagnostics
+
+
+@dataclasses.dataclass(frozen=True)
+class PflugController:
+    """Algorithm 1: adaptive fastest-k SGD via Pflug's phase-transition test.
+
+    Monitors sign(ĝ_jᵀ ĝ_{j−1}); counter += 1 on negative, −1 on positive.
+    When counter > thresh and count_iter > burnin and k ≤ n − step:
+    k += step and both counters reset.
+    """
+
+    n_workers: int
+    k0: int = 1
+    step: int = 1
+    thresh: int = 10
+    burnin: int = 0
+    k_max: int | None = None  # defaults to n_workers
+
+    def init(self, params_like) -> PflugState:
+        return PflugState(
+            k=jnp.asarray(self.k0, jnp.int32),
+            count_negative=jnp.asarray(0, jnp.int32),
+            count_iter=jnp.asarray(1, jnp.int32),
+            prev_grad=_tree_zeros_like(params_like),
+            have_prev=jnp.asarray(False),
+            n_switches=jnp.asarray(0, jnp.int32),
+        )
+
+    def update(self, state: PflugState, grads, sim_time: jax.Array) -> tuple[PflugState, jax.Array]:
+        del sim_time  # the heuristic is oblivious to the clock
+        k_cap = self.k_max if self.k_max is not None else self.n_workers
+        dot = _tree_dot(grads, state.prev_grad)
+        # First iteration: no previous gradient -> no sign event.
+        delta = jnp.where(state.have_prev, jnp.where(dot < 0, 1, -1), 0).astype(jnp.int32)
+        count_neg = state.count_negative + delta
+
+        do_switch = (
+            (count_neg > self.thresh)
+            & (state.count_iter > self.burnin)
+            & (state.k + self.step <= k_cap)
+        )
+        new_k = jnp.where(do_switch, state.k + self.step, state.k)
+        count_neg = jnp.where(do_switch, 0, count_neg)
+        count_iter = jnp.where(do_switch, 0, state.count_iter) + 1
+
+        new_state = PflugState(
+            k=new_k,
+            count_negative=count_neg,
+            count_iter=count_iter,
+            prev_grad=jax.tree.map(lambda g: g.astype(jnp.float32), grads),
+            have_prev=jnp.asarray(True),
+            n_switches=state.n_switches + do_switch.astype(jnp.int32),
+        )
+        return new_state, new_k
+
+
+class SketchedPflugState(NamedTuple):
+    k: jax.Array
+    count_negative: jax.Array
+    count_iter: jax.Array
+    prev_sketch: jax.Array  # (sketch_dim,) — replaces the full prev-gradient
+    have_prev: jax.Array
+    n_switches: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SketchedPflugController:
+    """Algorithm 1 with a sketched inner-product test (beyond paper, §Perf).
+
+    The exact test stores ĝ_{j−1} — a full f32 copy of the parameters (5.3 GB
+    per chip for nemotron-4-340b under FSDP; 1.36 TB globally).  Instead we
+    store the random projection z_j = R ĝ_j with R a fixed (sketch_dim x N)
+    Rademacher operator regenerated from seeds on the fly (never stored):
+    E[⟨z_j, z_{j−1}⟩]/m = ⟨ĝ_j, ĝ_{j−1}⟩, and the *sign* — all Pflug needs —
+    is correct w.h.p. once |⟨ĝ_j,ĝ_{j−1}⟩| is a few std devs from 0, i.e.
+    exactly in the transient (strongly positive) and deep-stationary
+    (consistently negative) regimes the test discriminates.
+
+    State cost drops from 4·N bytes to 4·sketch_dim, at 2·sketch_dim·N extra
+    flops/step (a ~0.03% overhead at sketch_dim=64 vs one fwd+bwd).
+    """
+
+    n_workers: int
+    k0: int = 1
+    step: int = 1
+    thresh: int = 10
+    burnin: int = 0
+    k_max: int | None = None
+    sketch_dim: int = 64
+    seed: int = 1234
+
+    def init(self, params_like) -> SketchedPflugState:
+        return SketchedPflugState(
+            k=jnp.asarray(self.k0, jnp.int32),
+            count_negative=jnp.asarray(0, jnp.int32),
+            count_iter=jnp.asarray(1, jnp.int32),
+            prev_sketch=jnp.zeros((self.sketch_dim,), jnp.float32),
+            have_prev=jnp.asarray(False),
+            n_switches=jnp.asarray(0, jnp.int32),
+        )
+
+    def _sketch(self, grads) -> jax.Array:
+        """Count-sketch: one Rademacher sign vector per leaf (generated on the
+        fly, never stored) + positional bucketing into sketch_dim bins.
+        E[⟨sketch(g), sketch(g')⟩] = ⟨g, g'⟩; transient memory is one
+        leaf-sized buffer (no (sketch_dim x N) materialization)."""
+        leaves = jax.tree_util.tree_flatten_with_path(grads)[0]
+        m = self.sketch_dim
+        z = jnp.zeros((m,), jnp.float32)
+        for path, g in leaves:
+            leaf_seed = self.seed + (hash(jax.tree_util.keystr(path)) % (2**30))
+            key = jax.random.PRNGKey(leaf_seed)
+            signs = jax.random.rademacher(key, g.shape, dtype=jnp.float32)
+            t = (signs * g.astype(jnp.float32)).reshape(-1)
+            pad = (-t.size) % m
+            if pad:
+                t = jnp.pad(t, (0, pad))
+            z = z + t.reshape(-1, m).sum(axis=0)
+        return z
+
+    def update(self, state: SketchedPflugState, grads, sim_time):
+        del sim_time
+        k_cap = self.k_max if self.k_max is not None else self.n_workers
+        z = self._sketch(grads)
+        dot = jnp.dot(z, state.prev_sketch)
+        delta = jnp.where(state.have_prev, jnp.where(dot < 0, 1, -1), 0).astype(jnp.int32)
+        count_neg = state.count_negative + delta
+        do_switch = (
+            (count_neg > self.thresh)
+            & (state.count_iter > self.burnin)
+            & (state.k + self.step <= k_cap)
+        )
+        new_k = jnp.where(do_switch, state.k + self.step, state.k)
+        count_neg = jnp.where(do_switch, 0, count_neg)
+        count_iter = jnp.where(do_switch, 0, state.count_iter) + 1
+        return (
+            SketchedPflugState(
+                k=new_k,
+                count_negative=count_neg,
+                count_iter=count_iter,
+                prev_sketch=z,
+                have_prev=jnp.asarray(True),
+                n_switches=state.n_switches + do_switch.astype(jnp.int32),
+            ),
+            new_k,
+        )
+
+
+class FixedState(NamedTuple):
+    k: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedKController:
+    """Non-adaptive fastest-k SGD (the paper's baseline)."""
+
+    n_workers: int
+    k: int = 1
+
+    def init(self, params_like) -> FixedState:
+        del params_like
+        return FixedState(k=jnp.asarray(self.k, jnp.int32))
+
+    def update(self, state: FixedState, grads, sim_time):
+        del grads, sim_time
+        return state, state.k
+
+
+class ScheduleState(NamedTuple):
+    k: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleController:
+    """Theorem-1 bound-optimal policy: switch k -> k+1 at precomputed times t_k.
+
+    `switch_times[i]` is the simulated wall-clock time at which k becomes
+    k0 + (i+1)*step.  Times come from `repro.core.theory.switching_times`.
+    """
+
+    n_workers: int
+    switch_times: Sequence[float]
+    k0: int = 1
+    step: int = 1
+
+    def init(self, params_like) -> ScheduleState:
+        del params_like
+        return ScheduleState(k=jnp.asarray(self.k0, jnp.int32))
+
+    def update(self, state: ScheduleState, grads, sim_time: jax.Array):
+        del grads
+        times = jnp.asarray(list(self.switch_times), jnp.float32)
+        n_passed = jnp.sum(sim_time >= times).astype(jnp.int32)
+        k = jnp.minimum(self.k0 + self.step * n_passed, self.n_workers)
+        new_state = ScheduleState(k=k)
+        return new_state, k
+
+
+class VarianceRatioState(NamedTuple):
+    k: jax.Array
+    ema_mean: Any  # pytree EMA of ĝ
+    ema_sq: jax.Array  # EMA of ||ĝ||²
+    count_iter: jax.Array
+    have_prev: jax.Array
+    n_switches: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class VarianceRatioController:
+    """Beyond-paper controller: switch when the gradient signal-to-noise dies.
+
+    Tracks EMA(ĝ) and EMA(||ĝ||²); in the stationary phase successive
+    gradients decorrelate so r = ||EMA(ĝ)||² / EMA(||ĝ||²) → 0, while in the
+    transient phase r stays O(1).  Switch k += step when r < ratio_thresh.
+    Unlike Pflug's sign test this uses gradient *magnitudes*, making it far
+    less noisy in high dimension (see EXPERIMENTS.md §Perf for comparison).
+    """
+
+    n_workers: int
+    k0: int = 1
+    step: int = 1
+    decay: float = 0.9
+    ratio_thresh: float = 0.2
+    burnin: int = 20
+    k_max: int | None = None
+
+    def init(self, params_like) -> VarianceRatioState:
+        return VarianceRatioState(
+            k=jnp.asarray(self.k0, jnp.int32),
+            ema_mean=_tree_zeros_like(params_like),
+            ema_sq=jnp.asarray(0.0, jnp.float32),
+            count_iter=jnp.asarray(0, jnp.int32),
+            have_prev=jnp.asarray(False),
+            n_switches=jnp.asarray(0, jnp.int32),
+        )
+
+    def update(self, state: VarianceRatioState, grads, sim_time):
+        del sim_time
+        k_cap = self.k_max if self.k_max is not None else self.n_workers
+        d = self.decay
+        ema_mean = jax.tree.map(
+            lambda m, g: d * m + (1 - d) * g.astype(jnp.float32), state.ema_mean, grads
+        )
+        gsq = _tree_dot(grads, grads)
+        ema_sq = d * state.ema_sq + (1 - d) * gsq
+        mean_sq = _tree_dot(ema_mean, ema_mean)
+        ratio = mean_sq / jnp.maximum(ema_sq, 1e-30)
+
+        do_switch = (
+            (ratio < self.ratio_thresh)
+            & (state.count_iter > self.burnin)
+            & (state.k + self.step <= k_cap)
+        )
+        new_k = jnp.where(do_switch, state.k + self.step, state.k)
+        # Reset EMAs on switch: the new k regime has different gradient stats.
+        ema_mean = jax.tree.map(
+            lambda m: jnp.where(do_switch, jnp.zeros_like(m), m), ema_mean
+        )
+        ema_sq = jnp.where(do_switch, 0.0, ema_sq)
+        count_iter = jnp.where(do_switch, 0, state.count_iter) + 1
+        return (
+            VarianceRatioState(
+                k=new_k,
+                ema_mean=ema_mean,
+                ema_sq=ema_sq,
+                count_iter=count_iter,
+                have_prev=jnp.asarray(True),
+                n_switches=state.n_switches + do_switch.astype(jnp.int32),
+            ),
+            new_k,
+        )
+
+
+def get_controller(name: str, n_workers: int, **kw):
+    registry = {
+        "pflug": PflugController,
+        "fixed": FixedKController,
+        "schedule": ScheduleController,
+        "variance_ratio": VarianceRatioController,
+    }
+    if name not in registry:
+        raise ValueError(f"unknown controller {name!r}; options {sorted(registry)}")
+    return registry[name](n_workers=n_workers, **kw)

@@ -1,0 +1,191 @@
+"""Worker response-time (straggler) models.
+
+The paper assumes worker response times X_1..X_n are iid random variables,
+independent across iterations, and studies fastest-k SGD whose per-iteration
+time is the k-th order statistic X_(k).  On a lock-step TPU pod the response
+times are not observable inside the XLA program, so this module provides the
+*simulation layer*: in-graph (jit-compatible) samplers for the common
+straggling distributions used in the straggler literature, plus their order
+statistics (analytic where available, quadrature otherwise).
+
+All samplers return times of shape ``(n_workers,)`` and are pure functions of
+a PRNG key, so the whole train step (sampling -> mask -> weighted gradient)
+stays a single compiled program.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "StragglerModel",
+    "Exponential",
+    "ShiftedExponential",
+    "Pareto",
+    "Bimodal",
+    "Deterministic",
+    "get_straggler_model",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerModel:
+    """Base class: iid worker response times."""
+
+    def sample(self, key: jax.Array, n: int) -> jax.Array:
+        """Draw n iid response times (float32, shape (n,))."""
+        raise NotImplementedError
+
+    # --- host-side analytics (numpy; used by theory.py and benchmarks) ---
+    def quantile(self, u: np.ndarray) -> np.ndarray:
+        """Inverse CDF, vectorized over u in (0,1)."""
+        raise NotImplementedError
+
+    def mean_order_statistic(self, k: int, n: int) -> float:
+        """E[X_(k)] for n iid draws.  Default: Beta-quadrature over quantiles.
+
+        E[X_(k)] = int_0^1 F^{-1}(u) * u^{k-1} (1-u)^{n-k} / B(k, n-k+1) du
+        """
+        m1, _ = _order_stat_moments(self.quantile, k, n)
+        return float(m1)
+
+    def var_order_statistic(self, k: int, n: int) -> float:
+        m1, m2 = _order_stat_moments(self.quantile, k, n)
+        return float(m2 - m1 * m1)
+
+
+def _order_stat_moments(quantile, k: int, n: int, num: int = 20001):
+    """First two moments of X_(k) via quadrature over the Beta(k, n-k+1) density."""
+    u = np.linspace(1e-9, 1 - 1e-9, num)
+    # log Beta(k, n-k+1) pdf, computed stably in logs.
+    from math import lgamma
+
+    logb = lgamma(n + 1) - lgamma(k) - lgamma(n - k + 1)
+    logpdf = logb + (k - 1) * np.log(u) + (n - k) * np.log1p(-u)
+    w = np.exp(logpdf)
+    x = quantile(u)
+    m1 = np.trapezoid(w * x, u)
+    m2 = np.trapezoid(w * x * x, u)
+    return m1, m2
+
+
+def _harmonic(n: int) -> float:
+    return float(np.sum(1.0 / np.arange(1, n + 1))) if n > 0 else 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Exponential(StragglerModel):
+    """X ~ Exp(rate); mean 1/rate.  E[X_(k)] = (H_n - H_{n-k})/rate."""
+
+    rate: float = 1.0
+
+    def sample(self, key, n):
+        return jax.random.exponential(key, (n,), dtype=jnp.float32) / self.rate
+
+    def quantile(self, u):
+        return -np.log1p(-u) / self.rate
+
+    def mean_order_statistic(self, k: int, n: int) -> float:
+        return (_harmonic(n) - _harmonic(n - k)) / self.rate
+
+    def var_order_statistic(self, k: int, n: int) -> float:
+        # Var[X_(k)] = (1/rate^2) * sum_{i=n-k+1}^{n} 1/i^2
+        i = np.arange(n - k + 1, n + 1)
+        return float(np.sum(1.0 / i**2) / self.rate**2)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShiftedExponential(StragglerModel):
+    """X ~ shift + Exp(rate) — the classic straggler model (fixed work + random delay)."""
+
+    shift: float = 1.0
+    rate: float = 1.0
+
+    def sample(self, key, n):
+        return self.shift + jax.random.exponential(key, (n,), dtype=jnp.float32) / self.rate
+
+    def quantile(self, u):
+        return self.shift - np.log1p(-u) / self.rate
+
+    def mean_order_statistic(self, k: int, n: int) -> float:
+        return self.shift + (_harmonic(n) - _harmonic(n - k)) / self.rate
+
+
+@dataclasses.dataclass(frozen=True)
+class Pareto(StragglerModel):
+    """X ~ Pareto(x_m, alpha): heavy-tailed stragglers (tail-at-scale regime)."""
+
+    x_m: float = 1.0
+    alpha: float = 2.5
+
+    def sample(self, key, n):
+        u = jax.random.uniform(key, (n,), dtype=jnp.float32, minval=1e-7, maxval=1.0)
+        return self.x_m * u ** (-1.0 / self.alpha)
+
+    def quantile(self, u):
+        return self.x_m * (1.0 - u) ** (-1.0 / self.alpha)
+
+
+@dataclasses.dataclass(frozen=True)
+class Bimodal(StragglerModel):
+    """Mixture: with prob p_slow a worker is a straggler (slow mode).
+
+    Models the empirically common "most workers fast, a few pathologically
+    slow" cluster behaviour.
+    """
+
+    fast_mean: float = 1.0
+    slow_mean: float = 10.0
+    p_slow: float = 0.1
+
+    def sample(self, key, n):
+        k1, k2, k3 = jax.random.split(key, 3)
+        slow = jax.random.bernoulli(k1, self.p_slow, (n,))
+        tf = jax.random.exponential(k2, (n,), dtype=jnp.float32) * self.fast_mean
+        ts = jax.random.exponential(k3, (n,), dtype=jnp.float32) * self.slow_mean
+        return jnp.where(slow, ts, tf)
+
+    def quantile(self, u):
+        # Numeric inversion of the mixture CDF on a grid.
+        x = np.linspace(1e-9, self.slow_mean * 30, 200001)
+        cdf = (1 - self.p_slow) * (1 - np.exp(-x / self.fast_mean)) + self.p_slow * (
+            1 - np.exp(-x / self.slow_mean)
+        )
+        return np.interp(u, cdf, x)
+
+
+@dataclasses.dataclass(frozen=True)
+class Deterministic(StragglerModel):
+    """Constant response time (no straggling) — the k=n sanity baseline."""
+
+    value: float = 1.0
+
+    def sample(self, key, n):
+        del key
+        return jnp.full((n,), self.value, dtype=jnp.float32)
+
+    def quantile(self, u):
+        return np.full_like(np.asarray(u, dtype=np.float64), self.value)
+
+    def mean_order_statistic(self, k: int, n: int) -> float:
+        return self.value
+
+
+_REGISTRY = {
+    "exponential": Exponential,
+    "shifted_exponential": ShiftedExponential,
+    "pareto": Pareto,
+    "bimodal": Bimodal,
+    "deterministic": Deterministic,
+}
+
+
+def get_straggler_model(name: str, **kwargs) -> StragglerModel:
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown straggler model {name!r}; options: {sorted(_REGISTRY)}")
+    return _REGISTRY[name](**kwargs)

@@ -1,0 +1,6 @@
+from repro.data.synthetic import (  # noqa: F401
+    LinRegData,
+    make_linreg_data,
+    TokenStream,
+    worker_major_batch,
+)

@@ -1,0 +1,96 @@
+"""Synthetic data pipelines.
+
+Two generators:
+  * the paper's linear-regression dataset (§V-A): X uniform over {1..10}^d,
+    w̄ uniform over {1..100}^d, y ~ N(<x, w̄>, 1);
+  * an infinite deterministic token stream for LM training (self-supervised
+    next-token prediction), sharded worker-major so that data-parallel worker
+    i always owns batch rows [i*s, (i+1)*s) — the layout the fastest-k
+    per-example weights assume.
+
+Both are fully deterministic functions of a seed (reproducible across hosts,
+no filesystem dependency), which is what a multi-pod launcher needs: every
+host computes its own shard without coordination.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class LinRegData(NamedTuple):
+    X: jax.Array  # (m, d)
+    y: jax.Array  # (m,)
+    w_star: jax.Array  # least-squares solution (for excess-risk curves)
+    f_star: float  # minimal mean loss
+
+
+def make_linreg_data(key: jax.Array, m: int = 2000, d: int = 100) -> LinRegData:
+    """The paper's synthetic linear-regression task (§V-A)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    X = jax.random.randint(k1, (m, d), 1, 11).astype(jnp.float32)
+    w_bar = jax.random.randint(k2, (d,), 1, 101).astype(jnp.float32)
+    y = X @ w_bar + jax.random.normal(k3, (m,), dtype=jnp.float32)
+    # Closed-form optimum for excess-risk reporting.
+    w_star, *_ = jnp.linalg.lstsq(X, y, rcond=None)
+    f_star = float(jnp.mean((X @ w_star - y) ** 2))
+    return LinRegData(X=X, y=y, w_star=w_star, f_star=f_star)
+
+
+def worker_major_batch(tokens: jax.Array, n_workers: int) -> jax.Array:
+    """Assert/reshape a (B, ...) batch into worker-major layout.
+
+    Row blocks of size B // n_workers belong to consecutive workers; this is
+    the contract between the data pipeline and fastest-k per-example weights.
+    """
+    b = tokens.shape[0]
+    if b % n_workers:
+        raise ValueError(f"batch {b} not divisible by n_workers {n_workers}")
+    return tokens
+
+
+@dataclasses.dataclass
+class TokenStream:
+    """Deterministic synthetic LM token stream.
+
+    Produces (tokens, targets) pairs: targets are tokens shifted by one; the
+    sequence is a seeded PRNG walk, with a simple Markov structure so the LM
+    loss is learnable (next token correlates with current).
+    """
+
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    correlation: float = 0.8
+
+    def batches(self) -> Iterator[Tuple[jax.Array, jax.Array]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+    def batch_at(self, step: int) -> Tuple[jax.Array, jax.Array]:
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        k1, k2 = jax.random.split(key)
+        b, t, v = self.global_batch, self.seq_len, self.vocab_size
+        base = jax.random.randint(k1, (b, t + 1), 0, v)
+        # Markov chain: with prob `correlation` the next token is prev+1
+        # (learnable structure), else a fresh random token.
+        follow = jax.random.bernoulli(k2, self.correlation, (b, t + 1))
+
+        def step_fn(prev, inp):
+            rnd, fol = inp
+            tok = jnp.where(fol, (prev + 1) % v, rnd)
+            return tok, tok
+
+        _, seq = jax.lax.scan(
+            step_fn, base[:, 0], (base.T, follow.T)
+        )
+        seq = seq.T  # (B, T+1)
+        return seq[:, :-1], seq[:, 1:]

@@ -1,0 +1,140 @@
+"""Blockwise flash attention for TPU (Pallas).
+
+TPU-native adaptation: HBM->VMEM tiles via BlockSpec, online softmax with the
+running max/denominator kept in VMEM scratch across the sequential kv-block
+grid axis, MXU-aligned (block sizes multiples of 128), causal + sliding-window
+block skipping, GQA via index_map head folding (kv tiles are fetched once per
+kv head, never materialized per q head).
+
+Grid: (batch, q_heads, num_q_blocks, num_kv_blocks) — the last axis is the
+sequential one on TPU, which is what makes the scratch carry correct.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float(-1e30)
+
+
+def _attn_kernel(
+    q_ref,  # (1, 1, bq, hd)
+    k_ref,  # (1, 1, bk, hd)
+    v_ref,  # (1, 1, bk, hd)
+    o_ref,  # (1, 1, bq, hd)
+    m_scr,  # (bq,)  running max
+    l_scr,  # (bq,)  running denominator
+    acc_scr,  # (bq, hd) running numerator
+    *,
+    causal: bool,
+    window: int,
+    sm_scale: float,
+    block_q: int,
+    block_k: int,
+    num_kv_blocks: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # Block-level skip: the whole kv block is out of the visible range.
+    fully_future = causal and (k_start > q_start + block_q - 1)
+    fully_expired = (window > 0) and (k_start + block_k - 1 < q_start - window + 1)
+    run = jnp.logical_not(jnp.logical_or(fully_future, fully_expired))
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (bq, bk)
+        s = s * sm_scale
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask = mask & (kpos <= qpos)
+        if window > 0:
+            mask = mask & (qpos - kpos < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        # fully-masked rows (e.g. q rows before any valid k) contribute nothing
+        p = jnp.where(mask, p, 0.0)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        v = v_ref[0, 0].astype(jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0, :, :] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bhtd(
+    q: jax.Array,  # (B, H, T, hd)
+    k: jax.Array,  # (B, KV, S, hd)
+    v: jax.Array,  # (B, KV, S, hd)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, t, hd = q.shape
+    kvh, s = k.shape[1], k.shape[2]
+    g = h // kvh
+    block_q = min(block_q, t)
+    block_k = min(block_k, s)
+    assert t % block_q == 0 and s % block_k == 0, (t, s, block_q, block_k)
+    nq, nk = t // block_q, s // block_k
+
+    kernel = functools.partial(
+        _attn_kernel,
+        causal=causal,
+        window=window,
+        sm_scale=1.0 / math.sqrt(hd),
+        block_q=block_q,
+        block_k=block_k,
+        num_kv_blocks=nk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda bb, hh, qi, ki: (bb, hh // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda bb, hh, qi, ki: (bb, hh // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, t, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

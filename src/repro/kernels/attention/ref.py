@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,  # (B, T, H, hd)
+    k: jax.Array,  # (B, S, KV, hd)
+    v: jax.Array,  # (B, S, KV, hd)
+    *,
+    causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    b, t, h, hd = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, t, kvh, g, hd)
+    scores = jnp.einsum("btngk,bsnk->bngts", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    if causal or window:
+        qpos = jnp.arange(t)[:, None]
+        kpos = jnp.arange(s)[None, :]
+        mask = kpos <= qpos if causal else jnp.ones((t, s), bool)
+        if window:
+            mask = mask & (qpos - kpos < window)
+        scores = jnp.where(mask, scores, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bngts,bsnk->btngk", probs, v)
+    return out.reshape(b, t, h, hd)

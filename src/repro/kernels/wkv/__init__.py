@@ -1,0 +1,2 @@
+from repro.kernels.wkv import ops, ref  # noqa: F401
+from repro.kernels.wkv.ops import wkv6  # noqa: F401

@@ -1,0 +1,130 @@
+"""RWKV-6 wkv chunked scan for TPU (Pallas).
+
+TPU-native adaptation of the Finch recurrence: instead of a GPU-style
+one-thread-per-channel serial scan, the sequence is processed in chunks.
+The chunk axis is the sequential (last) grid dimension; the per-(batch, head)
+state S in R^{K x V} lives in VMEM scratch and is carried across chunk steps.
+Within a chunk everything is matmul-shaped for the MXU: a decay-weighted
+(C x C) attention-like score matrix and (C,K)@(K,V) state applications.
+Decays are handled in log space with per-chunk re-centering.
+
+Grid: (B*H, T // C).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(
+    r_ref,  # (1, C, K)
+    k_ref,  # (1, C, K)
+    v_ref,  # (1, C, V)
+    w_ref,  # (1, C, K)
+    u_ref,  # (1, K)
+    s0_ref,  # (1, K, V)
+    y_ref,  # (1, C, V)
+    sT_ref,  # (1, K, V)
+    s_scr,  # (K, V) f32 carried state
+    *,
+    chunk: int,
+):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = s0_ref[0].astype(jnp.float32)
+
+    r = r_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)
+    s = s_scr[...]
+
+    logw = jnp.log(jnp.maximum(w, 1e-20))
+    li = jnp.cumsum(logw, axis=0)  # inclusive (C, K)
+    le = li - logw  # exclusive
+    lt = li[chunk - 1]  # (K,) chunk-total log decay
+
+    # inter-chunk: y_t += (r_t * exp(le_t)) @ S
+    y = jax.lax.dot_general(
+        r * jnp.exp(le), s, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (C, V)
+
+    # intra-chunk: scores[t, tau] = sum_k r_t k_tau exp(le_t - li_tau), tau < t
+    # (midpoint re-centering keeps each factor's exponent within the
+    # half-chunk decay range — see linear_scan.wkv6_chunked)
+    lref = li[chunk // 2]  # (K,)
+    r_dec = r * jnp.exp(le - lref[None, :])
+    k_dec = k * jnp.exp(lref[None, :] - li)
+    scores = jax.lax.dot_general(
+        r_dec, k_dec, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (C, C)
+    tpos = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    taupos = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    scores = jnp.where(taupos < tpos, scores, 0.0)
+    y = y + jax.lax.dot_general(
+        scores, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    # current-token bonus: u-weighted diagonal
+    bonus = jnp.sum(r * u[None, :] * k, axis=1, keepdims=True)  # (C, 1)
+    y = y + bonus * v
+
+    # state update: S' = exp(lt) S + sum_tau exp(lt - li_tau) k_tau v_tau^T
+    k_carry = k * jnp.exp(lt[None, :] - li)
+    s_new = jnp.exp(lt)[:, None] * s + jax.lax.dot_general(
+        k_carry, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    s_scr[...] = s_new
+    y_ref[0, :, :] = y.astype(y_ref.dtype)
+    sT_ref[0, :, :] = s_new.astype(sT_ref.dtype)
+
+
+def wkv6_bhtk(
+    r: jax.Array,  # (BH, T, K)
+    k: jax.Array,
+    v: jax.Array,  # (BH, T, V)
+    w: jax.Array,  # (BH, T, K) decays in (0,1)
+    u: jax.Array,  # (H, K)
+    s0: jax.Array,  # (BH, K, V)
+    *,
+    n_heads: int,
+    chunk: int = 128,
+    interpret: bool = False,
+):
+    bh, t, kdim = r.shape
+    vdim = v.shape[-1]
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+
+    kernel = functools.partial(_wkv_kernel, chunk=chunk)
+    y, s_final = pl.pallas_call(
+        kernel,
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, kdim), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, kdim), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, vdim), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, kdim), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, kdim), lambda b, c: (b % n_heads, 0)),
+            pl.BlockSpec((1, kdim, vdim), lambda b, c: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, vdim), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, kdim, vdim), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, t, vdim), jnp.float32),
+            jax.ShapeDtypeStruct((bh, kdim, vdim), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((kdim, vdim), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, s0)
+    return y, s_final

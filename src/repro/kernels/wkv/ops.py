@@ -1,0 +1,53 @@
+"""jit'd public wrapper for the wkv6 kernel: model layout (B,T,H,K) in/out,
+interpret-mode fallback off-TPU."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wkv.kernel import wkv6_bhtk
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def wkv6(
+    r: jax.Array,  # (B, T, H, K)
+    k: jax.Array,
+    v: jax.Array,  # (B, T, H, V)
+    w: jax.Array,  # (B, T, H, K)
+    u: jax.Array,  # (H, K)
+    s0: Optional[jax.Array] = None,  # (B, H, K, V)
+    *,
+    chunk: int = 128,
+) -> Tuple[jax.Array, jax.Array]:
+    b, t, h, kdim = r.shape
+    vdim = v.shape[-1]
+    chunk = min(chunk, t)
+    if chunk > 64:
+        # RWKV-6's decay is per-CHANNEL, so the intra-chunk scores cannot use
+        # the (C,C) pairwise-exact log-space form (that would need a (C,C,K)
+        # tensor); the factorized form's exponents grow with the half-chunk
+        # cumulative decay and overflow f32 beyond chunk 64.  (Mamba2 moved to
+        # scalar per-head decay precisely to lift this limit — see
+        # linear_scan.ssm_chunked, which is exact at any chunk.)
+        raise ValueError(f"wkv6 chunk must be <= 64 for f32 stability, got {chunk}")
+
+    def fold(x):  # (B,T,H,D) -> (B*H, T, D)
+        return jnp.transpose(x, (0, 2, 1, 3)).reshape(b * h, t, x.shape[-1])
+
+    if s0 is None:
+        s0 = jnp.zeros((b, h, kdim, vdim), jnp.float32)
+    y, s_final = wkv6_bhtk(
+        fold(r), fold(k), fold(v), fold(w),
+        u, s0.reshape(b * h, kdim, vdim),
+        n_heads=h, chunk=chunk, interpret=not _on_tpu(),
+    )
+    y = jnp.transpose(y.reshape(b, h, t, vdim), (0, 2, 1, 3))
+    return y, s_final.reshape(b, h, kdim, vdim)

@@ -1,0 +1,5 @@
+"""Pure-jnp oracle for the wkv6 kernel: the chunked linear scan in
+repro.models.linear_scan (itself validated against the step recurrence)."""
+
+from repro.models.linear_scan import wkv6_chunked as wkv6_ref  # noqa: F401
+from repro.models.linear_scan import wkv6_step  # noqa: F401

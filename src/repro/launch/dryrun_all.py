@@ -1,0 +1,99 @@
+"""Driver for the full dry-run matrix.
+
+Runs one subprocess per (arch x shape x mode) — each gets a fresh jax with
+512 host devices — and writes results/dryrun/<arch>__<shape>__<mode>.json.
+
+Modes:
+  base   scan-layers, single-pod 16x16: lowering proof + memory + trip-count-
+         corrected collectives  (the baseline table row)
+  pod2   scan-layers, multi-pod 2x16x16: proves the "pod" axis shards
+  cost4 / cost8
+         unrolled with n_layers=4 / 8, single-pod: exact per-layer HLO costs;
+         report.py extrapolates to full depth (HloCostAnalysis counts loop
+         bodies once, so scanned programs cannot give full-depth flops)
+
+Resumable: existing JSONs are skipped.  Run:
+  PYTHONPATH=src python -m repro.launch.dryrun_all --jobs 3
+"""
+
+from __future__ import annotations
+
+import argparse
+import itertools
+import json
+import os
+import subprocess
+import sys
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+ARCHS = [
+    "rwkv6-3b", "qwen3-moe-30b-a3b", "qwen1.5-110b", "qwen1.5-0.5b",
+    "granite-moe-1b-a400m", "seamless-m4t-medium", "hymba-1.5b",
+    "paligemma-3b", "nemotron-4-340b", "llama3.2-3b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+MODES = ["base", "pod2", "cost4", "cost8"]
+
+
+def job_cmd(arch: str, shape: str, mode: str, out: str):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", arch, "--shape", shape, "--out", out]
+    if mode == "pod2":
+        cmd.append("--multi-pod")
+    elif mode in ("cost4", "cost8"):
+        cmd += ["--unroll", "--override", f"n_layers={mode[-1]}"]
+    return cmd
+
+
+def run_job(arch: str, shape: str, mode: str, outdir: str, timeout: int):
+    out = os.path.join(outdir, f"{arch}__{shape}__{mode}.json")
+    if os.path.exists(out):
+        return (arch, shape, mode, "cached", 0.0)
+    t0 = time.time()
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    try:
+        proc = subprocess.run(
+            job_cmd(arch, shape, mode, out),
+            capture_output=True, text=True, timeout=timeout, env=env,
+            cwd=os.path.dirname(os.path.dirname(os.path.dirname(os.path.dirname(
+                os.path.abspath(__file__))))),
+        )
+        status = "ok" if proc.returncode == 0 and os.path.exists(out) else "FAIL"
+        if status == "FAIL":
+            with open(out + ".err", "w") as f:
+                f.write(proc.stdout[-4000:] + "\n---\n" + proc.stderr[-8000:])
+    except subprocess.TimeoutExpired:
+        status = "TIMEOUT"
+    return (arch, shape, mode, status, time.time() - t0)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jobs", type=int, default=3)
+    ap.add_argument("--outdir", default="results/dryrun")
+    ap.add_argument("--timeout", type=int, default=3600)
+    ap.add_argument("--modes", nargs="*", default=MODES)
+    ap.add_argument("--archs", nargs="*", default=ARCHS)
+    ap.add_argument("--shapes", nargs="*", default=SHAPES)
+    args = ap.parse_args()
+
+    os.makedirs(args.outdir, exist_ok=True)
+    combos = list(itertools.product(args.archs, args.shapes, args.modes))
+    print(f"{len(combos)} jobs, {args.jobs} parallel")
+    n_fail = 0
+    with ThreadPoolExecutor(max_workers=args.jobs) as ex:
+        futures = [ex.submit(run_job, a, s, m, args.outdir, args.timeout)
+                   for a, s, m in combos]
+        for fut in futures:
+            arch, shape, mode, status, dt = fut.result()
+            print(f"  {arch:22s} {shape:12s} {mode:6s} {status:8s} {dt:6.0f}s",
+                  flush=True)
+            n_fail += status not in ("ok", "cached")
+    print(f"done; {n_fail} failures")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

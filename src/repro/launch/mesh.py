@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+`make_production_mesh` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — smoke tests must keep
+seeing 1 CPU device; only dryrun.py (which sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import)
+sees the 512 placeholder devices.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """Degenerate 1-device mesh with the production axis names — used by CPU
+    integration tests so the same sharded code paths run unchanged."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def data_axes(mesh: jax.sharding.Mesh) -> tuple:
+    """The mesh axes that carry data parallelism (= the paper's n workers)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def n_workers(mesh: jax.sharding.Mesh) -> int:
+    n = 1
+    for a in data_axes(mesh):
+        n *= mesh.shape[a]
+    return n

@@ -1,0 +1,80 @@
+"""ShapeDtypeStruct stand-ins for every model input (the dry-run contract).
+
+`input_specs(cfg, shape)` returns weak-type-correct, shardable specs with no
+device allocation — exactly what jit(...).lower(**specs) needs.  The modality
+frontends are stubs per the assignment carve-out: [vlm] gets precomputed patch
+embeddings, [audio] gets precomputed frame embeddings.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import build_model
+
+
+def window_for(cfg: ModelConfig, shape: InputShape) -> int:
+    """Attention-window policy per input shape.
+
+    long_500k requires sub-quadratic memory: SSM archs need nothing; every
+    attention-bearing arch switches to its sliding-window variant
+    (cfg.long_context_window) so the KV cache is window-sized.  Other shapes
+    use the architecture's own window (Hymba ships with SWA; the rest run
+    full attention).
+    """
+    if shape.name == "long_500k" and cfg.family != "ssm":
+        return cfg.sliding_window or cfg.long_context_window
+    return cfg.sliding_window
+
+
+def cache_len_for(cfg: ModelConfig, shape: InputShape) -> int:
+    w = window_for(cfg, shape)
+    return min(shape.seq_len, w) if w else shape.seq_len
+
+
+def _extras(cfg: ModelConfig, batch: int, dtype) -> Dict[str, Any]:
+    out = {}
+    if cfg.family == "vlm":
+        out["patches"] = jax.ShapeDtypeStruct((batch, cfg.vlm_patches, cfg.d_model), dtype)
+    if cfg.family == "encdec":
+        out["frames"] = jax.ShapeDtypeStruct((batch, cfg.encoder_frames, cfg.d_model), dtype)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """Batch specs for the given input shape (train/prefill: token batch;
+    decode: one token + KV cache + position)."""
+    b, t = shape.global_batch, shape.seq_len
+    cdt = jnp.dtype(cfg.compute_dtype)
+    i32 = jnp.int32
+    if shape.kind == "train":
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, t), i32),
+            "targets": jax.ShapeDtypeStruct((b, t), i32),
+            **_extras(cfg, b, cdt),
+        }
+    if shape.kind == "prefill":
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, t), i32),
+            **_extras(cfg, b, cdt),
+        }
+    # decode: ONE new token against a seq_len-deep cache.  VLM patches are
+    # already inside the cache; only enc-dec frames (static encoder memory)
+    # remain a decode-time input.
+    model = build_model(cfg)
+    w = window_for(cfg, shape)
+    cache = jax.eval_shape(
+        lambda: model.init_cache(b, shape.seq_len, window=w)
+    )
+    extras = _extras(cfg, b, cdt)
+    extras.pop("patches", None)
+    return {
+        "token": jax.ShapeDtypeStruct((b, 1), i32),
+        "cache": cache,
+        "pos": jax.ShapeDtypeStruct((), i32),
+        **extras,
+    }

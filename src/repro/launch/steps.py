@@ -1,0 +1,157 @@
+"""The distributed step functions: adaptive fastest-k train_step, prefill_step,
+decode_step — the programs the dry-run lowers and the trainer runs.
+
+train_step is ONE compiled program containing the paper's whole loop body:
+  sample worker response times (straggler simulation) -> fastest-k mask ->
+  per-example weighted loss -> grad (XLA emits the data-parallel reduction)
+  -> optimizer update -> renewal-clock advance -> Algorithm-1 controller
+  update (k, Pflug counters, prev-gradient inner product).
+k is a traced int32 in the carried state, so adaptation never recompiles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.core import aggregation
+from repro.core.straggler import StragglerModel
+from repro.launch.specs import window_for
+from repro.models.model import Model
+from repro.optim.optimizers import Optimizer, apply_updates
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    ctrl_state: Any
+    sim_time: jax.Array  # renewal clock (f32 scalar)
+    step: jax.Array  # int32
+
+
+def init_train_state(model: Model, opt: Optimizer, controller, key) -> TrainState:
+    params = model.init(key)
+    return TrainState(
+        params=params,
+        opt_state=opt.init(params),
+        ctrl_state=controller.init(params),
+        sim_time=jnp.zeros((), jnp.float32),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def make_train_step(
+    model: Model,
+    opt: Optimizer,
+    controller,
+    straggler: StragglerModel,
+    n_workers: int,
+    comm: Optional[aggregation.CommModel] = None,
+    n_micro: int = 1,
+) -> Callable[[TrainState, Dict[str, jax.Array], jax.Array], Tuple[TrainState, Dict]]:
+    """Build the fastest-k train step for a given worker count / policy.
+
+    n_micro > 1 enables gradient accumulation over microbatches: each worker's
+    rows are split across microbatches (worker-major layout preserved inside
+    every microbatch) and the scanned fwd+bwd holds only one microbatch's
+    activations live — the lever that fits nemotron-4-340b's residuals in HBM.
+    Because the fastest-k loss is a weighted SUM, the accumulated gradient is
+    bit-identical in expectation to the single-shot one.
+    """
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array], key: jax.Array):
+        b = batch["tokens"].shape[0]
+        assert b % n_workers == 0, (b, n_workers)
+        rows_per_worker = b // n_workers
+
+        k = state.ctrl_state.k
+        weights, mask, t_iter = aggregation.fastest_k_iteration(
+            straggler, key, n_workers, k, rows_per_worker, comm
+        )
+
+        def weighted_loss(params, batch_part, weights_part):
+            per_row, metrics = model.loss_fn(params, batch_part)
+            return jnp.sum(weights_part.astype(per_row.dtype) * per_row), metrics
+
+        if n_micro == 1:
+            (loss, metrics), grads = jax.value_and_grad(weighted_loss, has_aux=True)(
+                state.params, batch, weights
+            )
+        else:
+            assert rows_per_worker % n_micro == 0, (rows_per_worker, n_micro)
+
+            def to_micro(x):
+                # (W*R, ...) -> (n_micro, W*R/n_micro, ...) keeping worker-major
+                tail = x.shape[1:]
+                x = x.reshape(n_workers, n_micro, rows_per_worker // n_micro, *tail)
+                return jnp.moveaxis(x, 1, 0).reshape(
+                    n_micro, n_workers * rows_per_worker // n_micro, *tail
+                )
+
+            micro_batch = jax.tree.map(to_micro, batch)
+            micro_weights = to_micro(weights)
+
+            def micro_body(carry, xs):
+                grads_acc, loss_acc = carry
+                batch_part, w_part = xs
+                (l, metrics), g = jax.value_and_grad(weighted_loss, has_aux=True)(
+                    state.params, batch_part, w_part
+                )
+                grads_acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32), grads_acc, g
+                )
+                return (grads_acc, loss_acc + l), metrics
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+            (grads, loss), metrics_all = jax.lax.scan(
+                micro_body, (zeros, jnp.zeros((), jnp.float32)),
+                (micro_batch, micro_weights),
+            )
+            metrics = jax.tree.map(lambda m: jnp.mean(m, axis=0), metrics_all)
+        updates, opt_state = opt.update(grads, state.opt_state, state.params)
+        params = apply_updates(state.params, updates)
+        sim_time = state.sim_time + t_iter
+        ctrl_state, new_k = controller.update(state.ctrl_state, grads, sim_time)
+
+        out_metrics = {
+            "loss": loss,
+            "ce": metrics["ce"],
+            "k": new_k,
+            "iter_time": t_iter,
+            "sim_time": sim_time,
+            "active_workers": jnp.sum(mask),
+        }
+        new_state = TrainState(
+            params=params,
+            opt_state=opt_state,
+            ctrl_state=ctrl_state,
+            sim_time=sim_time,
+            step=state.step + 1,
+        )
+        return new_state, out_metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model, cfg: ModelConfig, shape: InputShape):
+    w = window_for(cfg, shape)
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, window=w)
+
+    return prefill_step
+
+
+def make_decode_step(model: Model, cfg: ModelConfig, shape: InputShape):
+    w = window_for(cfg, shape)
+
+    def decode_step(params, token, cache, pos, **extras):
+        return model.decode_step(params, token, cache, pos, window=w, **extras)
+
+    return decode_step

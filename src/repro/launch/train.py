@@ -1,0 +1,131 @@
+"""End-to-end training driver: adaptive fastest-k SGD on any registered arch.
+
+Runs the same train_step program the dry-run lowers, on whatever devices are
+available (a CPU host mesh for the runnable examples; the production mesh on
+a real pod).  Logs loss / k / simulated wall-clock, checkpoints periodically.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b --smoke \
+        --steps 200 --batch 16 --seq 128 --controller pflug
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import checkpoint
+from repro.configs import get_config, get_smoke_config, list_archs
+from repro.core.aggregation import CommModel
+from repro.core.controller import get_controller
+from repro.core.straggler import get_straggler_model
+from repro.data import TokenStream
+from repro.launch import mesh as mesh_lib
+from repro.launch import sharding as shard_lib
+from repro.launch import steps as steps_lib
+from repro.models import build_model
+from repro.optim import get_optimizer
+from repro.shardctx import activation_sharding
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b", choices=list_archs())
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--n-workers", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--controller", default="pflug",
+                    choices=["pflug", "fixed", "variance_ratio"])
+    ap.add_argument("--k0", type=int, default=1)
+    ap.add_argument("--k-step", type=int, default=1)
+    ap.add_argument("--thresh", type=int, default=10)
+    ap.add_argument("--burnin", type=int, default=20)
+    ap.add_argument("--fixed-k", type=int, default=2)
+    ap.add_argument("--straggler", default="exponential",
+                    choices=["exponential", "shifted_exponential", "pareto",
+                             "bimodal", "deterministic"])
+    ap.add_argument("--comm-alpha", type=float, default=0.0)
+    ap.add_argument("--comm-beta", type=float, default=0.0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="use the 16x16 production mesh (requires 256 devices)")
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    mesh = (mesh_lib.make_production_mesh() if args.production_mesh
+            else mesh_lib.make_host_mesh())
+    n_workers = args.n_workers
+    if args.batch % n_workers:
+        raise SystemExit(f"--batch {args.batch} must be divisible by --n-workers {n_workers}")
+
+    opt = get_optimizer(args.optimizer, args.lr)
+    ckw = {}
+    if args.controller == "pflug":
+        ckw = dict(k0=args.k0, step=args.k_step, thresh=args.thresh, burnin=args.burnin)
+    elif args.controller == "fixed":
+        ckw = dict(k=args.fixed_k)
+    elif args.controller == "variance_ratio":
+        ckw = dict(k0=args.k0, step=args.k_step, burnin=args.burnin)
+    controller = get_controller(args.controller, n_workers, **ckw)
+    straggler = get_straggler_model(args.straggler)
+    comm = CommModel(alpha=args.comm_alpha, beta=args.comm_beta)
+
+    train_step = steps_lib.make_train_step(model, opt, controller, straggler,
+                                           n_workers, comm)
+    data = TokenStream(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                       global_batch=args.batch, seed=args.seed)
+
+    key = jax.random.PRNGKey(args.seed)
+    state = steps_lib.init_train_state(model, opt, controller, key)
+    start = 0
+    if args.ckpt_dir:
+        latest = checkpoint.latest_step(args.ckpt_dir)
+        if latest is not None:
+            state = checkpoint.restore(args.ckpt_dir, latest, state)
+            start = latest
+            print(f"restored step {latest} from {args.ckpt_dir}")
+
+    with mesh, activation_sharding(shard_lib.activation_resolver(mesh)):
+        jitted = jax.jit(train_step, donate_argnums=(0,))
+        t0 = time.time()
+        for step in range(start, args.steps):
+            tokens, targets = data.batch_at(step)
+            batch = {"tokens": tokens, "targets": targets}
+            if cfg.family == "vlm":
+                batch["patches"] = jnp.zeros(
+                    (args.batch, cfg.vlm_patches, cfg.d_model), jnp.float32)
+            if cfg.family == "encdec":
+                batch["frames"] = jnp.zeros(
+                    (args.batch, cfg.encoder_frames, cfg.d_model), jnp.float32)
+            key, sub = jax.random.split(key)
+            state, metrics = jitted(state, batch, sub)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                print(json.dumps({
+                    "step": step,
+                    "ce": round(float(metrics["ce"]), 4),
+                    "k": int(metrics["k"]),
+                    "sim_time": round(float(metrics["sim_time"]), 2),
+                    "iter_time": round(float(metrics["iter_time"]), 3),
+                    "wall_s": round(time.time() - t0, 1),
+                }), flush=True)
+            if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+                checkpoint.save(args.ckpt_dir, step + 1, state)
+    if args.ckpt_dir:
+        checkpoint.save(args.ckpt_dir, args.steps, state)
+        print(f"saved final checkpoint at step {args.steps}")
+
+
+if __name__ == "__main__":
+    main()

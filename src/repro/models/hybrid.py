@@ -1,0 +1,133 @@
+"""Hymba-style hybrid block: parallel attention + SSM heads in every layer.
+
+The defining Hymba feature (arXiv:2411.13676): each layer feeds the *same*
+normed input to an attention branch and a Mamba branch in parallel; the two
+outputs are independently normalized, averaged, and projected.  The SSM branch
+here is a Mamba2-style selective scan (scalar per-head decay) sharing head
+geometry with the attention branch.  Meta-tokens / cross-layer KV sharing are
+omitted (DESIGN.md §9).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers, linear_scan
+from repro.models.layers import _dense_init, _dtype
+from repro.shardctx import constrain, constrain_alt
+
+
+def ssm_branch_init(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    h, hd, n = cfg.n_heads, cfg.resolved_head_dim, cfg.ssm_state
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 5)
+    return {
+        "w_xs": _dense_init(ks[0], (d, h, hd), dt, d),  # per-head input proj
+        "w_dt": _dense_init(ks[1], (d, h), jnp.float32, d),  # step-size proj
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "a_log": jnp.zeros((h,), jnp.float32),  # A = -exp(a_log)
+        "w_b": _dense_init(ks[2], (d, h, n), dt, d),
+        "w_c": _dense_init(ks[3], (d, h, n), dt, d),
+        "w_os": _dense_init(ks[4], (h, hd, d), dt, h * hd),
+        "skip_d": jnp.ones((h, hd), jnp.float32),  # D skip connection
+    }
+
+
+def ssm_branch(
+    params, cfg: ModelConfig, x: jax.Array, s0: Optional[jax.Array] = None
+) -> Tuple[jax.Array, jax.Array]:
+    """x: (B,T,D) -> (y (B,T,D), final state (B,H,N,P))."""
+    h, hd, n = cfg.n_heads, cfg.resolved_head_dim, cfg.ssm_state
+    xs = constrain_alt(
+        jnp.einsum("btd,dhp->bthp", x, params["w_xs"]),
+        ("batch", "none", "tp", "none"), ("batch", "none", "none", "tp"),
+    )
+    dt = jax.nn.softplus(
+        x.astype(jnp.float32) @ params["w_dt"] + params["dt_bias"]
+    )  # (B,T,H)
+    a = -jnp.exp(params["a_log"])
+    bmat = jnp.einsum("btd,dhn->bthn", x, params["w_b"])
+    cmat = jnp.einsum("btd,dhn->bthn", x, params["w_c"])
+
+    if x.shape[1] == 1:  # decode
+        s0 = (
+            s0
+            if s0 is not None
+            else jnp.zeros((x.shape[0], h, n, hd), jnp.float32)
+        )
+        y1, s_new = linear_scan.ssm_step(
+            xs[:, 0], dt[:, 0], a, bmat[:, 0], cmat[:, 0], s0
+        )
+        y = y1[:, None]
+    else:
+        chunk = min(cfg.wkv_chunk, x.shape[1])
+        y, s_new = linear_scan.ssm_chunked(xs, dt, a, bmat, cmat, s0, chunk=chunk)
+
+    y = y.astype(x.dtype) + xs * params["skip_d"].astype(x.dtype)
+    out = jnp.einsum("bthp,hpd->btd", y, params["w_os"])
+    return out, s_new
+
+
+def hymba_mix_init(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn": layers.attention_init(k1, cfg),
+        "ssm": ssm_branch_init(k2, cfg),
+        "norm_attn": jnp.ones((cfg.d_model,), jnp.float32),
+        "norm_ssm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+
+
+def _branch_norm(y, scale):
+    yf = y.astype(jnp.float32)
+    yf = yf * jax.lax.rsqrt(jnp.mean(jnp.square(yf), axis=-1, keepdims=True) + 1e-6)
+    return (yf * scale).astype(y.dtype)
+
+
+def hymba_mix_full(
+    params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    window: int = 0,
+    return_kv: bool = False,
+):
+    """Training/prefill: returns (y, final ssm state[, (k, v)])."""
+    y_attn, kv = layers.attention_full(
+        params["attn"], cfg, x, positions, causal=True, window=window, return_kv=True
+    )
+    y_ssm, s_new = ssm_branch(params["ssm"], cfg, x)
+    y = 0.5 * (
+        _branch_norm(y_attn, params["norm_attn"]) + _branch_norm(y_ssm, params["norm_ssm"])
+    )
+    if return_kv:
+        return y, s_new, kv
+    return y, s_new
+
+
+def hymba_mix_decode(
+    params,
+    cfg: ModelConfig,
+    x: jax.Array,  # (B,1,D)
+    cache_k: jax.Array,
+    cache_v: jax.Array,
+    ssm_state: jax.Array,
+    pos: jax.Array,
+    *,
+    window: int = 0,
+):
+    """Returns (y, cache_k, cache_v, ssm_state)."""
+    y_attn, cache_k, cache_v = layers.attention_decode(
+        params["attn"], cfg, x, cache_k, cache_v, pos, window=window
+    )
+    y_ssm, ssm_state = ssm_branch(params["ssm"], cfg, x, ssm_state)
+    y = 0.5 * (
+        _branch_norm(y_attn, params["norm_attn"]) + _branch_norm(y_ssm, params["norm_ssm"])
+    )
+    return y, cache_k, cache_v, ssm_state

@@ -1,0 +1,367 @@
+"""Shared neural-net layers: norms, RoPE, GQA attention (bias / sliding window
+/ KV-cache), MLP variants, embeddings.
+
+Everything is functional: `*_init(key, cfg) -> params pytree` and pure forward
+functions.  Parameter leaf *names* are the contract with the sharding rules in
+`repro.launch.sharding` (e.g. any leaf named 'wq' of rank 3(+stack) is sharded
+(fsdp, tp, None)).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.shardctx import constrain, constrain_alt
+
+# ----------------------------------------------------------------------------
+# init helpers
+
+
+def _dense_init(key, shape, dtype, in_axis_size: int):
+    scale = 1.0 / jnp.sqrt(in_axis_size)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ----------------------------------------------------------------------------
+# norms
+
+
+def rmsnorm_init(cfg: ModelConfig, d: Optional[int] = None):
+    return {"scale": jnp.ones((d or cfg.d_model,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    return (x * params["scale"]).astype(dt)
+
+
+# ----------------------------------------------------------------------------
+# rotary embeddings
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., T, n, head_dim); positions: (T,) or broadcastable to (..., T)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freq  # (..., T, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]  # broadcast over head axis
+    sin = sin[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# attention
+
+
+def attention_init(key, cfg: ModelConfig) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d, h, hd), dt, d),
+        "wk": _dense_init(ks[1], (d, kv, hd), dt, d),
+        "wv": _dense_init(ks[2], (d, kv, hd), dt, d),
+        "wo": _dense_init(ks[3], (h, hd, d), dt, h * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), jnp.float32)
+        p["bk"] = jnp.zeros((kv, hd), jnp.float32)
+        p["bv"] = jnp.zeros((kv, hd), jnp.float32)
+    return p
+
+
+def _qkv(params, cfg: ModelConfig, x, kv_x=None):
+    """Project to q, k, v.  kv_x (if given) is the cross-attention memory."""
+    src = x if kv_x is None else kv_x
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"])
+    k = jnp.einsum("bsd,dnk->bsnk", src, params["wk"])
+    v = jnp.einsum("bsd,dnk->bsnk", src, params["wv"])
+    if "bq" in params:
+        q = q + params["bq"].astype(q.dtype)
+        k = k + params["bk"].astype(k.dtype)
+        v = v + params["bv"].astype(v.dtype)
+    q = constrain(q, "batch", "none", "tp", "none")
+    k = constrain(k, "batch", "none", "tp", "none")
+    v = constrain(v, "batch", "none", "tp", "none")
+    return q, k, v
+
+
+def _sdpa(cfg: ModelConfig, q, k, v, mask) -> jax.Array:
+    """Scaled dot-product attention with GQA (kv repeated to H heads).
+
+    Sharding strategy (constrain_alt picks the first divisible layout):
+      1. head (tensor) parallel — H % |model| == 0 (qwen, nemotron, seamless)
+      2. sequence/context parallel over the query axis — otherwise
+         (llama 24H, hymba 25H, paligemma 8H on a 16-way model axis)
+    q: (B,T,H,hd); k,v: (B,S,KV,hd); mask broadcastable to (B,H,T,S).
+    """
+    b, t, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    if t == 1:
+        return _sdpa_decode_grouped(q, k, v, mask, kvh, g, hd)
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    q = constrain_alt(q, ("batch", "none", "tp", "none"), ("batch", "tp", "none", "none"))
+    k = constrain_alt(k, ("batch", "none", "tp", "none"), ("batch", "none", "none", "none"))
+    v = constrain_alt(v, ("batch", "none", "tp", "none"), ("batch", "none", "none", "none"))
+    scores = jnp.einsum("bthk,bshk->bhts", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    if mask is not None:  # broadcastable to (B,H,T,S)
+        scores = jnp.where(mask, scores, jnp.finfo(jnp.float32).min)
+    scores = constrain_alt(
+        scores, ("batch", "tp", "none", "none"), ("batch", "none", "tp", "none")
+    )
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhts,bshk->bthk", probs, v)
+    return constrain_alt(
+        out, ("batch", "none", "tp", "none"), ("batch", "tp", "none", "none")
+    )
+
+
+def _sdpa_decode_grouped(q, k, v, mask, kvh, g, hd):
+    """Decode attention WITHOUT the GQA repeat: a repeat on the S-sharded
+    cache forces SPMD into 'involuntary full rematerialization' (it replicates
+    the multi-GB cache).  The grouped einsum keeps the cache's own layout —
+    kv-head-sharded when kv divides |model|, sequence-sharded otherwise."""
+    b, t = q.shape[:2]
+    k = constrain_alt(k, ("batch", "none", "tp", "none"), ("batch", "tp", "none", "none"))
+    v = constrain_alt(v, ("batch", "none", "tp", "none"), ("batch", "tp", "none", "none"))
+    qg = q.reshape(b, t, kvh, g, hd)
+    scores = jnp.einsum("btngk,bsnk->bngts", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    if mask is not None:  # (..., T, S)-broadcastable
+        scores = jnp.where(mask[:, None] if mask.ndim == 4 else mask, scores,
+                           jnp.finfo(jnp.float32).min)
+    scores = constrain_alt(
+        scores,
+        ("batch", "tp", "none", "none", "none"),
+        ("batch", "none", "none", "none", "tp"),
+    )
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bngts,bsnk->btngk", probs, v)
+    return out.reshape(b, t, kvh * g, hd)
+
+
+def _sdpa_blocked(cfg: ModelConfig, q, k, v, *, causal: bool, window: int) -> jax.Array:
+    """Online-softmax attention over key blocks (pure-jnp flash equivalent).
+
+    Never materializes the (T,S) score matrix: a lax.scan over S/blk key
+    blocks carries the running max m, denominator l, and numerator acc —
+    exactly the Pallas kernel's VMEM scratch recurrence, expressed at the XLA
+    level so the dry-run lowers it on any backend.  Peak transient is
+    (B,H,T,blk) instead of (B,H,T,S).
+    """
+    b, t, h, hd = q.shape
+    s = k.shape[1]
+    kvh = k.shape[2]
+    g = h // kvh
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    q = constrain_alt(q, ("batch", "none", "tp", "none"), ("batch", "tp", "none", "none"))
+    blk = min(cfg.attention_block, s)
+    if s % blk:
+        blk = s  # fallback: single block
+    nb = s // blk
+    qf = q.astype(jnp.float32) / jnp.sqrt(hd)
+    kb = jnp.moveaxis(k.reshape(b, nb, blk, h, hd), 1, 0)  # (NB,B,blk,H,hd)
+    vb = jnp.moveaxis(v.reshape(b, nb, blk, h, hd), 1, 0)
+    qpos = jnp.arange(t)[:, None]
+
+    def body(carry, xs):
+        m_prev, l_prev, acc = carry
+        kc, vc, ki = xs
+        scores = jnp.einsum("bthk,bshk->bhts", qf, kc.astype(jnp.float32))
+        kpos = ki * blk + jnp.arange(blk)[None, :]
+        mask = jnp.ones((t, blk), bool)
+        if causal:
+            mask = mask & (kpos <= qpos)
+        if window > 0:
+            mask = mask & (qpos - kpos < window)
+        scores = jnp.where(mask, scores, -1e30)
+        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new[..., None])
+        p = jnp.where(mask, p, 0.0)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhts,bshk->bthk", p.astype(vc.dtype), vc
+        ).astype(jnp.float32).transpose(0, 2, 1, 3)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, h, t), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, h, t), jnp.float32)
+    acc0 = jnp.zeros((b, h, t, hd), jnp.float32)
+    body = jax.checkpoint(body)
+    (m_f, l_f, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (kb, vb, jnp.arange(nb))
+    )
+    out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+    out = jnp.transpose(out, (0, 2, 1, 3)).astype(q.dtype)  # (B,T,H,hd)
+    return constrain_alt(
+        out, ("batch", "none", "tp", "none"), ("batch", "tp", "none", "none")
+    )
+
+
+def causal_window_mask(t: int, s: int, offset: int, window: int) -> jax.Array:
+    """(T,S) mask: query position i (global pos offset+i) may see key j
+    iff j <= offset+i and (window==0 or offset+i-j < window)."""
+    qpos = offset + jnp.arange(t)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    m = kpos <= qpos
+    if window > 0:
+        m = m & (qpos - kpos < window)
+    return m
+
+
+def attention_full(
+    params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    kv_x: Optional[jax.Array] = None,
+    kv_positions: Optional[jax.Array] = None,
+    return_kv: bool = False,
+):
+    """Full-sequence attention (training / prefill / encoder / cross)."""
+    q, k, v = _qkv(params, cfg, x, kv_x)
+    if kv_x is None:  # self-attention -> RoPE both sides
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions if kv_positions is None else kv_positions, cfg.rope_theta)
+    if cfg.use_pallas and kv_x is None and causal and x.shape[1] % 128 == 0:
+        from repro.kernels.attention import ops as attn_ops
+
+        out = attn_ops.flash_attention(q, k, v, causal=True, window=window)
+    elif cfg.attention_impl == "blocked" and kv_x is None and x.shape[1] > 1:
+        out = _sdpa_blocked(cfg, q, k, v, causal=causal, window=window)
+    else:
+        mask = None
+        if causal:
+            mask = causal_window_mask(x.shape[1], k.shape[1], 0, window)
+        out = _sdpa(cfg, q, k, v, mask)
+    y = jnp.einsum("bthk,hkd->btd", out, params["wo"])
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def attention_decode(
+    params,
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, 1, D)
+    cache_k: jax.Array,  # (B, S, KV, hd)
+    cache_v: jax.Array,
+    pos: jax.Array,  # scalar int32 — number of tokens already in cache
+    *,
+    window: int = 0,
+    kv_x: Optional[jax.Array] = None,
+):
+    """Single-token decode against a KV cache.
+
+    With window > 0 the cache is a ring buffer of length `window` (slot =
+    pos % window); otherwise the cache has length seq_len and slot = pos.
+    Returns (y, new_cache_k, new_cache_v).
+    """
+    if kv_x is not None:  # cross-attention: memory is static, no cache update
+        y = _cross_decode(params, cfg, x, kv_x)
+        return y, cache_k, cache_v
+
+    q, k, v = _qkv(params, cfg, x)
+    q = rope(q, pos[None], cfg.rope_theta)
+    k = rope(k, pos[None], cfg.rope_theta)
+
+    s = cache_k.shape[1]
+    slot = pos % window if window else pos
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), slot, axis=1)
+
+    kpos = jnp.arange(s)
+    if window:
+        # ring buffer: valid slots are those written within the last `window` steps
+        valid = (kpos <= slot) | (pos >= s)  # once full, all slots valid
+    else:
+        valid = kpos <= pos
+    mask = valid[None, None, None, :]  # (1,1,1,S) -> broadcast over (B,H,T)
+    y = _sdpa(cfg, q, cache_k, cache_v, mask)
+    y = jnp.einsum("bthk,hkd->btd", y, params["wo"])
+    return y, cache_k, cache_v
+
+
+def _cross_decode(params, cfg, x, memory):
+    q, k, v = _qkv(params, cfg, x, memory)
+    out = _sdpa(cfg, q, k, v, None)
+    return jnp.einsum("bthk,hkd->btd", out, params["wo"])
+
+
+# ----------------------------------------------------------------------------
+# MLPs
+
+
+def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 3)
+    if cfg.activation == "silu_glu":
+        return {
+            "w_gate": _dense_init(ks[0], (d, f), dt, d),
+            "w_in": _dense_init(ks[1], (d, f), dt, d),
+            "w_out": _dense_init(ks[2], (f, d), dt, f),
+        }
+    return {
+        "w_in": _dense_init(ks[1], (d, f), dt, d),
+        "w_out": _dense_init(ks[2], (f, d), dt, f),
+    }
+
+
+def mlp(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.activation == "silu_glu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_in"])
+    elif cfg.activation == "sq_relu":  # Nemotron-4: squared ReLU
+        h = jnp.square(jax.nn.relu(x @ params["w_in"]))
+    elif cfg.activation == "gelu":
+        h = jax.nn.gelu(x @ params["w_in"])
+    else:
+        raise ValueError(f"unknown activation {cfg.activation}")
+    return h @ params["w_out"]
+
+
+# ----------------------------------------------------------------------------
+# embedding / unembedding
+
+
+def embed_init(key, cfg: ModelConfig) -> dict:
+    v, d = cfg.padded_vocab, cfg.d_model
+    dt = _dtype(cfg)
+    k1, k2 = jax.random.split(key)
+    p = {"embed": _dense_init(k1, (v, d), dt, d)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = _dense_init(k2, (d, v), dt, d)
+    return p
+
+
+def embed(params, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.compute_dtype))
+
+
+def logits(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return (x @ w.astype(x.dtype)).astype(jnp.float32)

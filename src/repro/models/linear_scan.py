@@ -1,0 +1,184 @@
+"""Chunked linear-attention scans shared by RWKV-6 and the Mamba2-style SSM.
+
+Both recurrences are linear state-space updates with multiplicative decay:
+
+  RWKV-6 (per-channel diagonal decay, outer-product input):
+      S_t = diag(w_t) S_{t-1} + k_t v_t^T          S in R^{K x V} per head
+      y_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+
+  Mamba2-style SSM (scalar per-head decay):
+      S_t = a_t S_{t-1} + dt_t * b_t x_t^T          S in R^{N x P} per head
+      y_t = c_t S_t
+
+Each is computed chunkwise: `lax.scan` over T/C chunks carries the state; the
+intra-chunk term is a decay-weighted attention-like matmul (MXU-shaped), the
+inter-chunk term applies the carried state.  These pure-jnp forms are the
+oracles for the Pallas kernels in `repro/kernels/wkv` (which swap in via
+cfg.use_pallas) and are what the models call by default.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_chunked(
+    r: jax.Array,  # (B, T, H, K)
+    k: jax.Array,  # (B, T, H, K)
+    v: jax.Array,  # (B, T, H, V)
+    w: jax.Array,  # (B, T, H, K)  decay in (0,1)
+    u: jax.Array,  # (H, K)        current-token bonus
+    s0: jax.Array | None = None,  # (B, H, K, V) initial state
+    chunk: int = 32,
+) -> Tuple[jax.Array, jax.Array]:
+    """RWKV-6 wkv with data-dependent diagonal decay.  Returns (y, s_T).
+
+    Computed in float32 internally; decays handled in log space with per-chunk
+    re-centering so ratios stay bounded by the chunk length.
+    """
+    b, t, h, kdim = k.shape
+    vdim = v.shape[-1]
+    if t % chunk:
+        raise ValueError(f"T={t} not divisible by chunk={chunk}")
+    nc = t // chunk
+    f32 = jnp.float32
+    r, k, v, w = (a.astype(f32) for a in (r, k, v, w))
+    u = u.astype(f32)
+
+    # (B, NC, C, H, *)
+    rs = r.reshape(b, nc, chunk, h, kdim)
+    ks = k.reshape(b, nc, chunk, h, kdim)
+    vs = v.reshape(b, nc, chunk, h, vdim)
+    ws = w.reshape(b, nc, chunk, h, kdim)
+
+    logw = jnp.log(jnp.maximum(ws, 1e-20))
+    lw_inc = jnp.cumsum(logw, axis=2)  # inclusive cumulative log-decay, (B,NC,C,H,K)
+    lw_exc = lw_inc - logw  # exclusive
+
+    if s0 is None:
+        s0 = jnp.zeros((b, h, kdim, vdim), f32)
+
+    def chunk_body(s, xs):
+        rc, kc, vc, lwi, lwe, lwt = xs  # lwt: (B,H,K) total log-decay of the chunk
+        # inter-chunk: y_t += (r_t * exp(lw_exc_t)) @ S
+        r_dec = rc * jnp.exp(lwe)  # (B,C,H,K)
+        y_inter = jnp.einsum("bchk,bhkv->bchv", r_dec, s)
+        # intra-chunk: scores[t,tau] = sum_k r_t[k] k_tau[k] exp(lwe_t[k]-lwi_tau[k]), tau < t
+        # Re-centered at the chunk MIDPOINT so each factor's exponent is bounded
+        # by the half-chunk cumulative decay (end-centering overflows f32 for
+        # strong decays at chunk >= 64).
+        lref = lwi[:, chunk // 2]  # (B,H,K)
+        k_dec = kc * jnp.exp(-lwi + lref[:, None])
+        r_dec2 = rc * jnp.exp(lwe - lref[:, None])
+        scores = jnp.einsum("bchk,bdhk->bhcd", r_dec2, k_dec)  # (B,H,C,C) c=query d=key
+        # where (not multiply): masked future entries can be inf, and inf*0=NaN
+        cm = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_), k=-1)  # strictly lower: tau < t
+        scores = jnp.where(cm, scores, 0.0)
+        # current-token bonus: diag term u
+        bonus = jnp.einsum("bchk,hk,bchk->bch", rc, u, kc)
+        y_intra = jnp.einsum("bhcd,bdhv->bchv", scores, vc) + bonus[..., None] * vc
+        # state update: S' = diag(exp(lwt)) S + sum_tau exp(lwt - lwi_tau) ... wait:
+        #   S' = sum_tau (prod_{tau<l<=C} w_l) k_tau v_tau^T + exp(lwt) S
+        k_carry = kc * jnp.exp(lwt[:, None] - lwi)  # (B,C,H,K)
+        s_new = jnp.exp(lwt)[..., None] * s + jnp.einsum("bchk,bchv->bhkv", k_carry, vc)
+        return s_new, y_inter + y_intra
+
+    xs = (
+        jnp.moveaxis(rs, 1, 0),
+        jnp.moveaxis(ks, 1, 0),
+        jnp.moveaxis(vs, 1, 0),
+        jnp.moveaxis(lw_inc, 1, 0),
+        jnp.moveaxis(lw_exc, 1, 0),
+        jnp.moveaxis(lw_inc[:, :, -1], 1, 0),
+    )
+    s_final, ys = jax.lax.scan(chunk_body, s0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, t, h, vdim)
+    return y, s_final
+
+
+def wkv6_step(r, k, v, w, u, s):
+    """Single-token RWKV-6 update (decode).  Shapes: r/k/w (B,H,K), v (B,H,V),
+    u (H,K), s (B,H,K,V).  Returns (y (B,H,V), s')."""
+    f32 = jnp.float32
+    r, k, v, w = (a.astype(f32) for a in (r, k, v, w))
+    kv = jnp.einsum("bhk,bhv->bhkv", k, v)
+    y = jnp.einsum("bhk,bhkv->bhv", r, s + u.astype(f32)[None, :, :, None] * kv)
+    s_new = w[..., None] * s + kv
+    return y, s_new
+
+
+def ssm_chunked(
+    x: jax.Array,  # (B, T, H, P)  per-head inputs
+    dt: jax.Array,  # (B, T, H)     positive step sizes
+    a: jax.Array,  # (H,)          negative decay rates (A)
+    bmat: jax.Array,  # (B, T, H, N) input projections  (B_t)
+    cmat: jax.Array,  # (B, T, H, N) output projections (C_t)
+    s0: jax.Array | None = None,  # (B, H, N, P)
+    chunk: int = 32,
+) -> Tuple[jax.Array, jax.Array]:
+    """Mamba2-style chunked scan: scalar per-head decay a_t = exp(a * dt_t)."""
+    b, t, h, p = x.shape
+    n = bmat.shape[-1]
+    if t % chunk:
+        raise ValueError(f"T={t} not divisible by chunk={chunk}")
+    nc = t // chunk
+    f32 = jnp.float32
+    x, dt, bmat, cmat = (z.astype(f32) for z in (x, dt, bmat, cmat))
+    a = a.astype(f32)
+
+    xs_ = x.reshape(b, nc, chunk, h, p)
+    dts = dt.reshape(b, nc, chunk, h)
+    bs = bmat.reshape(b, nc, chunk, h, n)
+    cs = cmat.reshape(b, nc, chunk, h, n)
+
+    la = a[None, None, None, :] * dts  # log-decay per step (B,NC,C,H), <= 0
+    la_inc = jnp.cumsum(la, axis=2)
+    la_exc = la_inc - la
+
+    if s0 is None:
+        s0 = jnp.zeros((b, h, n, p), f32)
+
+    def chunk_body(s, inp):
+        xc, dtc, bc, cc, li, le, lt = inp
+        del le  # y_t reads the *post-update* state S_t, so the carried state
+        # decays by the inclusive cumulative decay li (unlike RWKV's S_{t-1}).
+        # li: (B,C,H); pairwise decay exp(li_t - li_tau) over (B,H,Cq,Ck), tau <= t
+        c_dec = cc * jnp.exp(li)[..., None]
+        y_inter = jnp.einsum("bchn,bhnp->bchp", c_dec, s)
+        liq = jnp.transpose(li, (0, 2, 1))  # (B,H,C)
+        cm = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_))  # tau <= t
+        # masked (future) exponents are positive and can overflow: where, not *
+        pair = jnp.exp(jnp.where(cm, liq[:, :, :, None] - liq[:, :, None, :], 0.0))
+        scores = jnp.where(cm, jnp.einsum("bchn,bdhn->bhcd", cc, bc) * pair, 0.0)
+        xin = xc * dtc[..., None]  # (B,C,H,P)
+        y_intra = jnp.einsum("bhcd,bdhp->bchp", scores, xin)
+        # state: S' = exp(lt) S + sum_tau exp(lt - li_tau) dt_tau b_tau x_tau^T
+        b_carry = bc * jnp.exp(lt[:, None] - li)[..., None]
+        s_new = jnp.exp(lt)[..., None, None] * s + jnp.einsum(
+            "bchn,bchp->bhnp", b_carry, xin
+        )
+        return s_new, y_inter + y_intra
+
+    inp = tuple(
+        jnp.moveaxis(z, 1, 0)
+        for z in (xs_, dts, bs, cs, la_inc, la_exc, la_inc[:, :, -1])
+    )
+    s_final, ys = jax.lax.scan(chunk_body, s0, inp)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, t, h, p)
+    return y, s_final
+
+
+def ssm_step(x, dt, a, bvec, cvec, s):
+    """Single-token SSM update.  x (B,H,P), dt (B,H), a (H,), b/c (B,H,N),
+    s (B,H,N,P) -> (y (B,H,P), s')."""
+    f32 = jnp.float32
+    x, dt, bvec, cvec = (z.astype(f32) for z in (x, dt, bvec, cvec))
+    decay = jnp.exp(a.astype(f32)[None, :] * dt)  # (B,H)
+    s_new = decay[..., None, None] * s + jnp.einsum(
+        "bhn,bhp->bhnp", bvec, x * dt[..., None]
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", cvec, s_new)
+    return y, s_new

@@ -1,0 +1,194 @@
+"""Top-level model API: build_model(cfg) -> Model(init, loss_fn, prefill,
+decode_step, init_cache).
+
+Batch dict contract (see launch/specs.py for the ShapeDtypeStruct versions):
+  train:   {tokens (B,T) i32, targets (B,T) i32}
+           + vlm:    patches (B,P,D)  — stub frontend embeddings
+           + encdec: frames  (B,F,D)  — stub frontend embeddings
+  prefill: {tokens (B,T)} (+ patches / frames)
+  decode:  {token (B,1), cache, pos ()} (+ frames -> enc_out for encdec)
+
+loss_fn returns *per-batch-row* losses (B,) — the fastest-k aggregation layer
+turns these into the masked weighted mean of eq. (2), so the model never needs
+to know about stragglers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers, transformer
+from repro.shardctx import constrain
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Any]
+    loss_fn: Callable[[Any, Dict[str, jax.Array]], Tuple[jax.Array, Dict[str, jax.Array]]]
+    prefill: Callable[..., Tuple[jax.Array, Any]]
+    decode_step: Callable[..., Tuple[jax.Array, Any]]
+    init_cache: Callable[..., Any]
+
+
+def _ce_per_row(logits: jax.Array, targets: jax.Array, vocab: int, mask=None) -> jax.Array:
+    """Mean next-token cross-entropy per batch row.  logits (B,T,Vpad) f32."""
+    vpad = logits.shape[-1]
+    if vpad > vocab:  # mask padded vocab entries out of the softmax
+        neg = jnp.finfo(logits.dtype).min
+        pad_mask = jnp.arange(vpad) >= vocab
+        logits = jnp.where(pad_mask, neg, logits)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold  # (B,T)
+    if mask is not None:
+        return jnp.sum(nll * mask, axis=-1) / jnp.maximum(jnp.sum(mask, axis=-1), 1.0)
+    return jnp.mean(nll, axis=-1)
+
+
+def _ce_per_row_chunked(
+    params, cfg: ModelConfig, x: jax.Array, targets: jax.Array, chunk: int = 512
+) -> jax.Array:
+    """CE over sequence chunks so the (B,T,Vpad) f32 logits tensor is never
+    materialized (peak temp is (B,chunk,Vpad/tp) instead).  Chunks are scanned
+    when cfg.scan_layers (fast compile) and unrolled otherwise (so the
+    dry-run's cost analysis counts every chunk — HloCostAnalysis counts loop
+    bodies once)."""
+    b, t, _ = x.shape
+    if t % chunk or t <= chunk:
+        lg = constrain(layers.logits(params, cfg, x), "batch", "none", "tp")
+        return _ce_per_row(lg, targets, cfg.vocab_size)
+    nc = t // chunk
+    xs = jnp.moveaxis(x.reshape(b, nc, chunk, -1), 1, 0)  # (NC,B,C,D)
+    tg = jnp.moveaxis(targets.reshape(b, nc, chunk), 1, 0)  # (NC,B,C)
+
+    def body_sum(xc, tc):
+        lg = constrain(layers.logits(params, cfg, xc), "batch", "none", "tp")
+        # sum (not mean) of nll over the chunk, per row
+        vpad = lg.shape[-1]
+        if vpad > cfg.vocab_size:
+            pad_mask = jnp.arange(vpad) >= cfg.vocab_size
+            lg = jnp.where(pad_mask, jnp.finfo(lg.dtype).min, lg)
+        logz = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, tc[..., None], axis=-1)[..., 0]
+        return jnp.sum(logz - gold, axis=-1)  # (B,)
+
+    if cfg.scan_layers:
+        def scan_body(acc, inp):
+            xc, tc = inp
+            return acc + jax.checkpoint(body_sum)(xc, tc), None
+
+        total, _ = jax.lax.scan(scan_body, jnp.zeros((b,), jnp.float32), (xs, tg))
+    else:
+        total = jnp.zeros((b,), jnp.float32)
+        for i in range(nc):
+            total = total + body_sum(xs[i], tg[i])
+    return total / t
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    is_encdec = cfg.family == "encdec"
+    is_vlm = cfg.family == "vlm"
+
+    # ------------------------------------------------------------- init
+    def init(key: jax.Array):
+        k_emb, k_dec, k_enc = jax.random.split(key, 3)
+        params = {
+            **layers.embed_init(k_emb, cfg),
+            "layers": transformer.init_layer_stack(k_dec, cfg, cfg.n_layers, cross=is_encdec),
+            "final_norm": layers.rmsnorm_init(cfg),
+        }
+        if is_encdec:
+            enc_cfg = dataclasses.replace(cfg, family="dense")
+            params["encoder"] = transformer.init_layer_stack(
+                k_enc, enc_cfg, cfg.encoder_layers
+            )
+            params["enc_norm"] = layers.rmsnorm_init(cfg)
+        return params
+
+    # --------------------------------------------------------- encoder
+    def encode(params, frames: jax.Array) -> jax.Array:
+        """Bidirectional encoder over stub frame embeddings (B,F,D)."""
+        enc_cfg = dataclasses.replace(cfg, family="dense")
+        pos = jnp.arange(frames.shape[1])
+        x = frames.astype(jnp.dtype(cfg.compute_dtype))
+        x, _ = transformer.run_stack_full(
+            params["encoder"], enc_cfg, x, pos,
+            causal=False, n_layers=cfg.encoder_layers,
+        )
+        return layers.rmsnorm(params["enc_norm"], x)
+
+    def _prefix_embed(params, batch) -> Tuple[jax.Array, Optional[jax.Array], int]:
+        """Embed tokens, prepend VLM patches if present.  Returns
+        (x, enc_out, n_prefix)."""
+        x = layers.embed(params, cfg, batch["tokens"])
+        enc_out = None
+        n_prefix = 0
+        if is_vlm and "patches" in batch:
+            patches = batch["patches"].astype(x.dtype)
+            x = jnp.concatenate([patches, x], axis=1)
+            n_prefix = patches.shape[1]
+        if is_encdec and "frames" in batch:
+            enc_out = encode(params, batch["frames"])
+        return x, enc_out, n_prefix
+
+    # ------------------------------------------------------------ train
+    def loss_fn(params, batch):
+        x, enc_out, n_prefix = _prefix_embed(params, batch)
+        x = constrain(x, "batch", "none", "none")
+        pos = jnp.arange(x.shape[1])
+        x, aux = transformer.run_stack_full(
+            params["layers"], cfg, x, pos,
+            window=cfg.sliding_window, enc_out=enc_out,
+        )
+        x = layers.rmsnorm(params["final_norm"], x)
+        if n_prefix:
+            x = x[:, n_prefix:]
+        per_row = _ce_per_row_chunked(params, cfg, x, batch["targets"])
+        per_row = constrain(per_row, "batch")
+        metrics = {"ce": jnp.mean(per_row), "moe_aux": aux}
+        if cfg.family == "moe":
+            per_row = per_row + cfg.router_aux_weight * aux / per_row.shape[0]
+        return per_row, metrics
+
+    # ---------------------------------------------------------- prefill
+    def prefill(params, batch, *, window: Optional[int] = None):
+        w = cfg.sliding_window if window is None else window
+        x, enc_out, n_prefix = _prefix_embed(params, batch)
+        pos = jnp.arange(x.shape[1])
+        x, cache = transformer.run_stack_prefill(
+            params["layers"], cfg, x, pos, window=w, enc_out=enc_out
+        )
+        x = layers.rmsnorm(params["final_norm"], x)
+        lg = layers.logits(params, cfg, x[:, -1:])
+        return lg[:, 0], cache
+
+    # ----------------------------------------------------------- decode
+    def decode_step(params, token, cache, pos, *, window: int = 0,
+                    enc_out: Optional[jax.Array] = None, frames=None):
+        """One token: token (B,1) i32, pos () i32 = #tokens already decoded."""
+        if is_encdec and enc_out is None and frames is not None:
+            enc_out = encode(params, frames)
+        x = layers.embed(params, cfg, token)
+        x, new_cache = transformer.run_stack_decode(
+            params["layers"], cache, cfg, x, pos, window=window, enc_out=enc_out
+        )
+        x = layers.rmsnorm(params["final_norm"], x)
+        lg = layers.logits(params, cfg, x)
+        return lg[:, 0], new_cache
+
+    def init_cache(batch: int, cache_len: int, window: int = 0):
+        return transformer.init_cache(cfg, batch, cache_len, window)
+
+    return Model(
+        cfg=cfg,
+        init=init,
+        loss_fn=loss_fn,
+        prefill=prefill,
+        decode_step=decode_step,
+        init_cache=init_cache,
+    )

@@ -1,0 +1,201 @@
+"""Mixture-of-Experts layer: top-k router + GShard-style capacity-based
+dispatch/combine einsums (the TPU-native expert-parallel formulation).
+
+Tokens are grouped by batch row (the data-parallel shard), experts are sharded
+along the 'model' mesh axis, so dispatch/combine lower to all-to-alls across
+the expert dimension.  Tokens routed beyond an expert's capacity
+C = ceil(cf * S * top_k / E) are dropped (their combine weight is zero) —
+the standard dropped-token strategy.
+
+Note (recorded in EXPERIMENTS.md): under fastest-k SGD, masked-out workers
+still *compute* their shard (SPMD) but contribute zero gradient; router load
+statistics are over the full batch, so capacity does not need rescaling.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _dense_init, _dtype
+from repro.shardctx import constrain
+
+
+def moe_init(key, cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": _dense_init(ks[0], (d, e), jnp.float32, d),
+        "w_in": _dense_init(ks[1], (e, d, f), dt, d),
+        "w_out": _dense_init(ks[2], (e, f, d), dt, f),
+    }
+    if cfg.activation == "silu_glu":
+        p["w_gate"] = _dense_init(ks[3], (e, d, f), dt, d)
+    return p
+
+
+def _capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    c = int(cfg.capacity_factor * tokens_per_group * cfg.moe_top_k / cfg.n_experts)
+    return max(c, 1)
+
+
+def moe_layer(params, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, T, D) -> (y, aux_loss).  Groups = batch rows."""
+    g, s, d = x.shape
+    e, top_k = cfg.n_experts, cfg.moe_top_k
+    c = _capacity(cfg, s)
+
+    router_logits = (x.astype(jnp.float32) @ params["router"]).astype(jnp.float32)  # (G,S,E)
+    probs = jax.nn.softmax(router_logits, axis=-1)
+
+    # top-k selection, normalized over the selected experts (Qwen/Mixtral style)
+    top_p, top_idx = jax.lax.top_k(probs, top_k)  # (G,S,K)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # --- capacity assignment: iterate the K routing slots, tracking per-expert fill
+    def slot_body(carry, inputs):
+        fill = carry  # (G, E) tokens already assigned per expert
+        idx_k, p_k = inputs  # (G,S) expert ids, (G,S) gates for this slot
+        onehot = jax.nn.one_hot(idx_k, e, dtype=jnp.int32)  # (G,S,E)
+        # position of each token within its expert queue (priority = seq order)
+        pos_in_e = jnp.cumsum(onehot, axis=1) - onehot + fill[:, None, :]  # (G,S,E)
+        pos = jnp.sum(pos_in_e * onehot, axis=-1)  # (G,S)
+        keep = pos < c
+        fill = fill + jnp.sum(onehot * keep[..., None].astype(jnp.int32), axis=1)
+        return fill, (idx_k, p_k * keep.astype(p_k.dtype), pos)
+
+    fill0 = jnp.zeros((g, e), jnp.int32)
+    _, (idxs, gates, positions) = jax.lax.scan(
+        slot_body,
+        fill0,
+        (jnp.moveaxis(top_idx, -1, 0), jnp.moveaxis(top_p, -1, 0)),
+    )
+    # idxs/gates/positions: (K, G, S)
+
+    # load-balance aux loss (Switch/GShard): E * sum_e f_e * p_e
+    f_e = jnp.mean(jax.nn.one_hot(top_idx[..., 0], e, dtype=jnp.float32), axis=(0, 1))
+    p_e = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(f_e * p_e)
+
+    if cfg.moe_dispatch == "gather":
+        y = _dispatch_gather(params, cfg, x, idxs, gates, positions, c,
+                             combine="gather")
+    elif cfg.moe_dispatch == "hybrid":
+        # gather dispatch (no one-hot flops) + einsum combine (lowers to
+        # partial-sum + all-reduce instead of a cross-shard gather)
+        y = _dispatch_gather(params, cfg, x, idxs, gates, positions, c,
+                             combine="einsum")
+    elif cfg.moe_dispatch == "scatter":
+        # gather dispatch + scatter-add combine: never materializes a
+        # (G,S,E,C) one-hot tensor (the memory hog of the einsum forms)
+        y = _dispatch_gather(params, cfg, x, idxs, gates, positions, c,
+                             combine="scatter")
+    else:
+        y = _dispatch_einsum(params, cfg, x, idxs, gates, positions, c)
+    return y, aux
+
+
+def _expert_ffn(params, cfg: ModelConfig, xin: jax.Array) -> jax.Array:
+    """xin: (E, G, C, D) -> (E, G, C, D) through the per-expert MLP."""
+    if cfg.activation == "silu_glu":
+        h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", xin, params["w_gate"]))
+        h = h * jnp.einsum("egcd,edf->egcf", xin, params["w_in"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("egcd,edf->egcf", xin, params["w_in"]))
+    return jnp.einsum("egcf,efd->egcd", h, params["w_out"])
+
+
+def _dispatch_einsum(params, cfg, x, idxs, gates, positions, c):
+    g, s, d = x.shape
+    e = cfg.n_experts
+    # dispatch/combine tensors (G, S, E, C)
+    expert_oh = jax.nn.one_hot(idxs, e, dtype=x.dtype)  # (K,G,S,E)
+    pos_oh = jax.nn.one_hot(positions, c, dtype=x.dtype)  # (K,G,S,C)
+    combine = jnp.einsum("kgse,kgsc,kgs->gsec", expert_oh, pos_oh, gates.astype(x.dtype))
+    dispatch = jnp.einsum("kgse,kgsc->gsec", expert_oh, pos_oh)
+
+    # dispatch tokens to experts: (E, G, C, D) — expert-parallel over 'model',
+    # so this einsum lowers to the MoE all-to-all across the expert axis
+    xin = jnp.einsum("gsec,gsd->egcd", dispatch, x)
+    xin = constrain(xin, "experts", "batch", "none", "none")
+    out = _expert_ffn(params, cfg, xin)
+    out = constrain(out, "experts", "batch", "none", "none")
+    y = jnp.einsum("gsec,egcd->gsd", combine, out)
+    return constrain(y, "batch", "none", "none")
+
+
+def _dispatch_gather(params, cfg, x, idxs, gates, positions, c,
+                     combine: str = "gather"):
+    """Index-based dispatch/combine (§Perf): the one-hot einsums above cost
+    O(G*S*E*C*D) MXU flops — orders of magnitude more than the expert FFNs
+    themselves for large E*C.  Gathers/scatters cost zero flops and lower to
+    the same expert all-to-all.
+
+    idxs/gates/positions: (K, G, S); dropped tokens have gate == 0.
+    """
+    g, s, d = x.shape
+    e, top_k = cfg.n_experts, cfg.moe_top_k
+
+    # --- build token_source (G, E, C): which token fills expert slot (e, c).
+    # Dropped assignments are routed to a spare slot c == C and sliced off.
+    kk = idxs.shape[0]
+    g_ix = jnp.broadcast_to(jnp.arange(g)[None, :, None], (kk, g, s)).reshape(-1)
+    e_ix = idxs.reshape(-1)
+    keep = (gates > 0).reshape(-1)
+    c_ix = jnp.where(keep, positions.reshape(-1), c)  # spare slot for drops
+    s_ix = jnp.broadcast_to(jnp.arange(s)[None, None, :], (kk, g, s)).reshape(-1)
+    token_source = jnp.zeros((g, e, c + 1), jnp.int32).at[g_ix, e_ix, c_ix].set(
+        s_ix.astype(jnp.int32), mode="drop"
+    )[:, :, :c]
+    slot_filled = jnp.zeros((g, e, c + 1), jnp.bool_).at[g_ix, e_ix, c_ix].set(
+        keep, mode="drop"
+    )[:, :, :c]
+
+    # --- dispatch: ONE gather along S (local to each group/batch shard)
+    idx_flat = token_source.reshape(g, e * c)
+    xin = jnp.take_along_axis(x, idx_flat[:, :, None], axis=1)  # (G, E*C, D)
+    xin = xin.reshape(g, e, c, d) * slot_filled[..., None].astype(x.dtype)
+    xin = jnp.transpose(xin, (1, 0, 2, 3))  # (E, G, C, D)
+    xin = constrain(xin, "experts", "batch", "none", "none")
+
+    out = _expert_ffn(params, cfg, xin)
+    out = constrain(out, "experts", "batch", "none", "none")
+
+    if combine == "einsum":
+        # combine via the one-hot einsum: contraction over the expert-sharded
+        # (e, c) dims -> local partial sums + one all-reduce of (G, S, D)
+        expert_oh = jax.nn.one_hot(idxs, cfg.n_experts, dtype=x.dtype)  # (K,G,S,E)
+        pos_oh = jax.nn.one_hot(jnp.minimum(positions, c - 1), c, dtype=x.dtype)
+        comb = jnp.einsum("kgse,kgsc,kgs->gsec", expert_oh, pos_oh,
+                          gates.astype(x.dtype))
+        y = jnp.einsum("gsec,egcd->gsd", comb, out)
+        return constrain(y, "batch", "none", "none")
+
+    if combine == "scatter":
+        # scatter-add each filled expert slot's gated output back to its
+        # token: no one-hots, bwd is a cheap gather; expert-sharded partial
+        # scatters all-reduce into the batch-sharded y.
+        gate_slot = jnp.zeros((g, cfg.n_experts, c + 1), x.dtype).at[
+            g_ix, e_ix, c_ix
+        ].set(gates.reshape(-1).astype(x.dtype), mode="drop")[:, :, :c]
+        out_g = jnp.transpose(out, (1, 0, 2, 3))  # (G, E, C, D)
+        weighted = out_g * gate_slot[..., None]
+        y = jnp.zeros((g, s, d), x.dtype).at[
+            jnp.arange(g)[:, None], token_source.reshape(g, -1)
+        ].add(weighted.reshape(g, -1, d))
+        return constrain(y, "batch", "none", "none")
+
+    # --- combine: ONE gather of all K expert outputs per token, then a
+    # gate-weighted contraction over K
+    out_gc = jnp.transpose(out, (1, 0, 2, 3)).reshape(g, e * c, d)  # (G, E*C, D)
+    flat_slot = (idxs * c + jnp.minimum(positions, c - 1)).astype(jnp.int32)  # (K,G,S)
+    slot_gk = jnp.transpose(flat_slot, (1, 0, 2)).reshape(g, top_k * s)  # (G, K*S)
+    picked = jnp.take_along_axis(out_gc, slot_gk[:, :, None], axis=1)  # (G, K*S, D)
+    picked = picked.reshape(g, top_k, s, d)
+    gates_gk = jnp.transpose(gates, (1, 0, 2)).astype(x.dtype)  # (G, K, S)
+    y = jnp.einsum("gks,gksd->gsd", gates_gk, picked)
+    return constrain(y, "batch", "none", "none")

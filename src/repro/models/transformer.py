@@ -1,0 +1,339 @@
+"""Model assembly for every assigned architecture family.
+
+A single layer-stack engine (scan or unrolled — same stacked params, so the
+sharding specs are identical in both modes) with family-specific blocks:
+
+  dense / moe / vlm : [RMSNorm -> GQA attention] + [RMSNorm -> MLP | MoE]
+  encdec (decoder)  : adds [RMSNorm -> cross-attention] over encoder memory
+  ssm (RWKV-6)      : [LN -> time-mix] + [LN -> channel-mix]
+  hybrid (Hymba)    : [RMSNorm -> parallel attn+SSM mix] + [RMSNorm -> MLP]
+
+Three entry points per model: loss_fn (training), prefill, decode_step.
+Decode caches are pytrees of stacked (L, ...) arrays so the layer engine can
+scan over them.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import hybrid, layers, moe, rwkv
+from repro.shardctx import constrain
+
+# ============================================================================
+# per-family block init
+
+
+def block_init(key, cfg: ModelConfig, cross: bool = False) -> dict:
+    ks = jax.random.split(key, 6)
+    fam = cfg.family
+    if fam == "ssm":
+        return {
+            "ln1": layers.rmsnorm_init(cfg),
+            "tmix": rwkv.time_mix_init(ks[0], cfg),
+            "ln2": layers.rmsnorm_init(cfg),
+            "cmix": rwkv.channel_mix_init(ks[1], cfg),
+        }
+    if fam == "hybrid":
+        return {
+            "ln1": layers.rmsnorm_init(cfg),
+            "mix": hybrid.hymba_mix_init(ks[0], cfg),
+            "ln2": layers.rmsnorm_init(cfg),
+            "mlp": layers.mlp_init(ks[1], cfg),
+        }
+    p = {
+        "ln1": layers.rmsnorm_init(cfg),
+        "attn": layers.attention_init(ks[0], cfg),
+        "ln2": layers.rmsnorm_init(cfg),
+    }
+    if fam == "moe":
+        p["moe"] = moe.moe_init(ks[1], cfg)
+    else:
+        p["mlp"] = layers.mlp_init(ks[1], cfg)
+    if cross:
+        p["ln_x"] = layers.rmsnorm_init(cfg)
+        p["xattn"] = layers.attention_init(ks[2], cfg)
+    return p
+
+
+def init_layer_stack(key, cfg: ModelConfig, n_layers: int, cross: bool = False):
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(lambda k: block_init(k, cfg, cross))(keys)
+
+
+# ============================================================================
+# per-family block forward (full-sequence: train / prefill / encoder)
+
+
+def _kv_to_ring_cache(k: jax.Array, window: int) -> jax.Array:
+    """Pack full-sequence kv (B,T,KV,hd) into a ring cache of length `window`
+    such that slot = t % window holds the latest token with that residue."""
+    t = k.shape[1]
+    if window <= 0 or t <= window:
+        return k
+    base = t - window
+    perm = (base + jnp.arange(window)) % window
+    cache = jnp.zeros((k.shape[0], window) + k.shape[2:], k.dtype)
+    return cache.at[:, perm].set(k[:, base:])
+
+
+def _block_full(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    window: int,
+    causal: bool = True,
+    enc_out: Optional[jax.Array] = None,
+    capture_cache: bool = False,
+):
+    """Returns (x_out, aux, cache_l) — cache_l is a per-layer decode-cache dict
+    (matching init_cache leaves, without the L axis) when capture_cache."""
+    fam = cfg.family
+    aux = jnp.zeros((), jnp.float32)
+    cache_l = None
+    if cfg.seq_parallel and x.shape[1] > 1:
+        x = constrain(x, "batch", "tp", "none")
+    else:
+        x = constrain(x, "batch", "none", "none")
+    if fam == "ssm":
+        h = layers.rmsnorm(p["ln1"], x)
+        y, x_att, s = rwkv.time_mix(p["tmix"], cfg, h)
+        x = x + y
+        h = layers.rmsnorm(p["ln2"], x)
+        y, x_ffn = rwkv.channel_mix(p["cmix"], cfg, h)
+        if capture_cache:
+            cache_l = {"x_att": x_att, "x_ffn": x_ffn, "s": s}
+        return x + y, aux, cache_l
+    if fam == "hybrid":
+        y, s_new, kv = hybrid.hymba_mix_full(
+            p["mix"], cfg, layers.rmsnorm(p["ln1"], x), positions, window=window,
+            return_kv=True,
+        )
+        x = x + y
+        x = x + layers.mlp(p["mlp"], cfg, layers.rmsnorm(p["ln2"], x))
+        if capture_cache:
+            cache_l = {
+                "k": _kv_to_ring_cache(kv[0], window),
+                "v": _kv_to_ring_cache(kv[1], window),
+                "ssm": s_new,
+            }
+        return x, aux, cache_l
+
+    h = layers.rmsnorm(p["ln1"], x)
+    y, kv = layers.attention_full(
+        p["attn"], cfg, h, positions, causal=causal, window=window, return_kv=True
+    )
+    x = x + y
+    if enc_out is not None and "xattn" in p:
+        x = x + layers.attention_full(
+            p["xattn"], cfg, layers.rmsnorm(p["ln_x"], x), positions, causal=False, kv_x=enc_out
+        )
+    h = layers.rmsnorm(p["ln2"], x)
+    if fam == "moe":
+        y, aux = moe.moe_layer(p["moe"], cfg, h)
+    else:
+        y = layers.mlp(p["mlp"], cfg, h)
+    if capture_cache:
+        cache_l = {
+            "k": _kv_to_ring_cache(kv[0], window),
+            "v": _kv_to_ring_cache(kv[1], window),
+        }
+    return x + y, aux, cache_l
+
+
+# ============================================================================
+# layer-stack engines
+
+
+def run_stack_full(
+    stacked: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    window: int = 0,
+    causal: bool = True,
+    enc_out: Optional[jax.Array] = None,
+    n_layers: Optional[int] = None,
+    remat: Optional[bool] = None,
+):
+    """Full-sequence forward through the layer stack.  Returns (x, aux_sum)."""
+    n_layers = n_layers if n_layers is not None else cfg.n_layers
+    remat = cfg.remat if remat is None else remat
+
+    def body(x, p):
+        x, aux, _ = _block_full(
+            p, cfg, x, positions, window=window, causal=causal, enc_out=enc_out
+        )
+        return x, aux
+
+    if remat:
+        if cfg.remat_policy == "dots":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            )
+        else:
+            body = jax.checkpoint(body)
+
+    if cfg.scan_layers:
+        x, auxs = jax.lax.scan(lambda c, p: body(c, p), x, stacked, length=n_layers)
+        return x, jnp.sum(auxs)
+    aux_sum = jnp.zeros((), jnp.float32)
+    for i in range(n_layers):
+        p = jax.tree.map(lambda a: a[i], stacked)
+        x, aux = body(x, p)
+        aux_sum = aux_sum + aux
+    return x, aux_sum
+
+
+def run_stack_prefill(
+    stacked: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    window: int = 0,
+    enc_out: Optional[jax.Array] = None,
+):
+    """Prefill: full-sequence forward that also captures the decode cache.
+    Returns (x, cache) with cache leaves stacked over layers."""
+
+    def body(x, p):
+        x, _, cache_l = _block_full(
+            p, cfg, x, positions, window=window, enc_out=enc_out, capture_cache=True
+        )
+        return x, cache_l
+
+    if cfg.scan_layers:
+        return jax.lax.scan(body, x, stacked, length=cfg.n_layers)
+    caches = []
+    for i in range(cfg.n_layers):
+        p = jax.tree.map(lambda a: a[i], stacked)
+        x, cache_l = body(x, p)
+        caches.append(cache_l)
+    cache = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *caches)
+    return x, cache
+
+
+def _block_decode(
+    p: dict,
+    cache_l: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    x: jax.Array,  # (B,1,D)
+    pos: jax.Array,
+    *,
+    window: int,
+    enc_out: Optional[jax.Array] = None,
+):
+    """One layer of single-token decode.  Returns (x_out, new_cache_l)."""
+    fam = cfg.family
+    new_cache = dict(cache_l)
+    if fam == "ssm":
+        y, xp, s = rwkv.time_mix(
+            p["tmix"], cfg, layers.rmsnorm(p["ln1"], x), cache_l["x_att"], cache_l["s"]
+        )
+        x = x + y
+        new_cache["x_att"], new_cache["s"] = xp, s
+        y, xp = rwkv.channel_mix(
+            p["cmix"], cfg, layers.rmsnorm(p["ln2"], x), cache_l["x_ffn"]
+        )
+        new_cache["x_ffn"] = xp
+        return x + y, new_cache
+    if fam == "hybrid":
+        y, ck, cv, s = hybrid.hymba_mix_decode(
+            p["mix"],
+            cfg,
+            layers.rmsnorm(p["ln1"], x),
+            cache_l["k"],
+            cache_l["v"],
+            cache_l["ssm"],
+            pos,
+            window=window,
+        )
+        x = x + y
+        new_cache.update(k=ck, v=cv, ssm=s)
+        x = x + layers.mlp(p["mlp"], cfg, layers.rmsnorm(p["ln2"], x))
+        return x, new_cache
+
+    h = layers.rmsnorm(p["ln1"], x)
+    y, ck, cv = layers.attention_decode(
+        p["attn"], cfg, h, cache_l["k"], cache_l["v"], pos, window=window
+    )
+    x = x + y
+    new_cache.update(k=ck, v=cv)
+    if enc_out is not None and "xattn" in p:
+        x = x + layers.attention_decode(
+            p["xattn"], cfg, layers.rmsnorm(p["ln_x"], x), cache_l["k"], cache_l["v"],
+            pos, kv_x=enc_out,
+        )[0]
+    h = layers.rmsnorm(p["ln2"], x)
+    if fam == "moe":
+        y, _ = moe.moe_layer(p["moe"], cfg, h)
+    else:
+        y = layers.mlp(p["mlp"], cfg, h)
+    return x + y, new_cache
+
+
+def run_stack_decode(
+    stacked: dict,
+    cache: Dict[str, jax.Array],  # stacked (L, ...) arrays
+    cfg: ModelConfig,
+    x: jax.Array,
+    pos: jax.Array,
+    *,
+    window: int = 0,
+    enc_out: Optional[jax.Array] = None,
+):
+    """Single-token decode through the stack.  Returns (x, new_cache)."""
+
+    def body(x, scanned):
+        p, cache_l = scanned
+        x, new_cache_l = _block_decode(
+            p, cache_l, cfg, x, pos, window=window, enc_out=enc_out
+        )
+        return x, new_cache_l
+
+    if cfg.scan_layers:
+        x, new_cache = jax.lax.scan(body, x, (stacked, cache), length=cfg.n_layers)
+        return x, new_cache
+    new_layers = []
+    for i in range(cfg.n_layers):
+        p = jax.tree.map(lambda a: a[i], stacked)
+        cache_l = jax.tree.map(lambda a: a[i], cache)
+        x, nc = _block_decode(p, cache_l, cfg, x, pos, window=window, enc_out=enc_out)
+        new_layers.append(nc)
+    new_cache = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *new_layers)
+    return x, new_cache
+
+
+# ============================================================================
+# cache construction
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, window: int = 0) -> dict:
+    """Zero decode cache (stacked over layers).  For windowed attention the
+    kv cache length is min(cache_len, window)."""
+    l, kv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
+    h, d, n = cfg.n_heads, cfg.d_model, max(cfg.ssm_state, 1)
+    dt = jnp.dtype(cfg.compute_dtype)
+    s = min(cache_len, window) if window else cache_len
+    if cfg.family == "ssm":
+        return {
+            "x_att": jnp.zeros((l, batch, d), dt),
+            "x_ffn": jnp.zeros((l, batch, d), dt),
+            "s": jnp.zeros((l, batch, h, hd, hd), jnp.float32),
+        }
+    cache = {
+        "k": jnp.zeros((l, batch, s, kv, hd), dt),
+        "v": jnp.zeros((l, batch, s, kv, hd), dt),
+    }
+    if cfg.family == "hybrid":
+        cache["ssm"] = jnp.zeros((l, batch, h, n, hd), jnp.float32)
+    return cache

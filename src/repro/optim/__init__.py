@@ -1,0 +1,20 @@
+"""Native pytree optimizers (no optax dependency).
+
+Interface (optax-like, but self-contained):
+
+    opt = sgd(lr=..., momentum=...)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+"""
+
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    adam,
+    adamw,
+    apply_updates,
+    clip_by_global_norm,
+    chain_clip,
+    sgd,
+    get_optimizer,
+)

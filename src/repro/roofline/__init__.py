@@ -1,0 +1,7 @@
+from repro.roofline.analysis import (  # noqa: F401
+    HW,
+    collective_bytes_from_hlo,
+    count_params,
+    model_flops,
+    roofline_terms,
+)

@@ -1,0 +1,218 @@
+"""Roofline analysis from the compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh), all per-chip seconds (the compiled
+module is the post-SPMD per-device program, so cost_analysis numbers are
+already per-chip):
+
+    compute_s    = HLO_FLOPs / peak_FLOP/s
+    memory_s     = HLO_bytes_accessed / HBM_bw
+    collective_s = collective_bytes / link_bw
+
+collective_bytes is NOT in cost_analysis: we parse the optimized HLO text and
+sum the result-shape bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op (result size == bytes leaving this chip per
+op, the standard proxy).  Ops inside while-loop bodies (lax.scan) are
+multiplied by the loop trip count, which we recover from the HLO constants —
+XLA's HloCostAnalysis counts loop bodies ONCE, so we apply the same trip-count
+correction to flops/bytes via the `loop_aware` path when the program scans
+over layers.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12  # bf16 / chip
+    hbm_bw: float = 819e9  # bytes/s / chip
+    ici_bw: float = 50e9  # bytes/s / link
+
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Sum bytes over every dtype[shape] occurring in an HLO result type."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, float]:
+    """Per-collective-type result bytes, with while-loop trip-count weighting.
+
+    HLO structure: computations are listed as blocks ("%name (args) -> ... {").
+    A while op references its body computation; ops inside that body execute
+    trip-count times.  We (1) find each computation's collective bytes,
+    (2) find while trip counts by locating the canonical
+    `compare(iter, constant)` pattern in the condition computation, and
+    (3) weight body computations by their trip count (nested loops multiply).
+    """
+    # --- split into computations
+    comp_re = re.compile(r"^(%?[\w\.\-]+) (?:\([^)]*\) -> .*?)?\{", re.M)
+    blocks: Dict[str, str] = {}
+    names = []
+    starts = []
+    for m in re.finditer(r"^([\w\.\-%]+)[^\n=]*\{\s*$", hlo_text, re.M):
+        names.append(m.group(1).lstrip("%"))
+        starts.append(m.start())
+    starts.append(len(hlo_text))
+    for i, name in enumerate(names):
+        blocks[name] = hlo_text[starts[i] : starts[i + 1]]
+
+    # --- collective bytes per computation
+    line_re = re.compile(
+        r"=\s+((?:\([^)]*\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?))\s+(%s)[\.\d]*\("
+        % "|".join(COLLECTIVES)
+    )
+    comp_coll: Dict[str, Dict[str, int]] = {}
+    for name, body in blocks.items():
+        per_type: Dict[str, int] = {}
+        for m in line_re.finditer(body):
+            per_type[m.group(2)] = per_type.get(m.group(2), 0) + _shape_bytes(m.group(1))
+        comp_coll[name] = per_type
+
+    # --- while trip counts: find `while(...) ... body=%name` and estimate the
+    # trip count from the condition's comparison constant.
+    trip: Dict[str, int] = {}
+    while_re = re.compile(r"while\([^)]*\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+    for m in while_re.finditer(hlo_text):
+        cond, body = m.group(1), m.group(2)
+        count = _trip_count_from_condition(blocks.get(cond, ""))
+        trip[body] = count
+
+    # --- which computation contains which while body (for nesting): weight =
+    # product of trip counts up the call chain.  We approximate nesting by
+    # iterating weights to fixpoint over the "computation A invokes while with
+    # body B" relation.
+    contains: Dict[str, list] = {name: [] for name in blocks}
+    for name, body_text in blocks.items():
+        for m in while_re.finditer(body_text):
+            contains[name].append(m.group(2))
+
+    weight: Dict[str, float] = {name: 1.0 for name in blocks}
+
+    def visit(name: str, w: float, depth=0):
+        if depth > 8:
+            return
+        for child in contains.get(name, []):
+            weight[child] = max(weight.get(child, 1.0), w * trip.get(child, 1))
+            visit(child, weight[child], depth + 1)
+
+    for name in blocks:
+        if name.startswith("main") or name.startswith("%main"):
+            visit(name, 1.0)
+    # fall back: visit all roots
+    child_set = {c for cs in contains.values() for c in cs}
+    for name in blocks:
+        if name not in child_set:
+            visit(name, 1.0)
+
+    out: Dict[str, float] = {c: 0.0 for c in COLLECTIVES}
+    for name, per_type in comp_coll.items():
+        for ctype, b in per_type.items():
+            out[ctype] += b * weight.get(name, 1.0)
+    out["total"] = float(sum(out.values()))
+    return out
+
+
+def _trip_count_from_condition(cond_text: str) -> int:
+    """Extract N from the canonical `compare(iter, N), direction=LT` pattern."""
+    consts = {}
+    for m in re.finditer(r"(%?[\w\.\-]+)\s*=\s*[su]\d+\[\]\s+constant\((\d+)\)", cond_text):
+        consts[m.group(1).lstrip("%")] = int(m.group(2))
+    m = re.search(r"compare\(\s*%?[\w\.\-]+,\s*%?([\w\.\-]+)\s*\),\s*direction=LT", cond_text)
+    if m and m.group(1).lstrip("%") in consts:
+        return consts[m.group(1).lstrip("%")]
+    # single constant in the condition is almost always the bound
+    if len(consts) == 1:
+        return next(iter(consts.values()))
+    return 1
+
+
+# ---------------------------------------------------------------- model flops
+
+
+def count_params(params_shapes: Any):
+    """(total, non_expert, expert_total, expert_dim) from a params
+    ShapeDtypeStruct tree.  MoE expert tensors are identified by the 'moe'
+    path segment; model_flops discounts them by top_k / n_experts."""
+    import jax
+
+    flat = jax.tree_util.tree_flatten_with_path(params_shapes)[0]
+    total = 0
+    expert_total = 0
+    expert_dim = 0
+    for path, leaf in flat:
+        keys = [p.key for p in path if hasattr(p, "key")]
+        n = int(np.prod(leaf.shape))
+        total += n
+        if "moe" in keys and keys[-1] != "router":
+            expert_total += n
+            # expert dim is the first non-layer axis
+            expert_dim = leaf.shape[1] if len(leaf.shape) == 4 else leaf.shape[0]
+    return total, total - expert_total, expert_total, expert_dim
+
+
+def model_flops(cfg, params_shapes, tokens: int, kind: str) -> float:
+    """6*N*D (train) or 2*N*D (forward-only), with N = active params for MoE."""
+    total, non_expert, expert_total, expert_dim = count_params(params_shapes)
+    if cfg.n_experts:
+        active = non_expert + expert_total * cfg.moe_top_k / max(cfg.n_experts, 1)
+    else:
+        active = total
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * active * tokens
+
+
+# ------------------------------------------------------------------- summary
+
+
+def roofline_terms(
+    cost: Dict[str, float],
+    coll_bytes: float,
+    hw: HW = HW(),
+) -> Dict[str, float]:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    compute_s = flops / hw.peak_flops
+    memory_s = byts / hw.hbm_bw
+    collective_s = coll_bytes / hw.ici_bw
+    terms = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+    }
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom
+    terms["hlo_flops"] = flops
+    terms["hlo_bytes"] = byts
+    terms["collective_bytes"] = coll_bytes
+    return terms

@@ -1,0 +1,119 @@
+"""Analytic per-device memory model for the dry-run report.
+
+XLA:CPU's buffer assignment is not remat-aware (temp_size_in_bytes grows per
+unrolled layer even though jax.checkpoint bounds the true live set), and its
+peak_memory statistic ignores temps entirely — so alongside memory_analysis()
+we report an analytic model of what a TPU actually holds:
+
+  state      params + optimizer moments + controller prev_grad (exact, from
+             the sharded ShapeDtypeStructs)
+  grads      one transient params-sized buffer (worst case)
+  residuals  train only: L x B_loc x T x D saved block inputs
+             (jax.checkpoint policy: save block boundaries, recompute inside)
+  transient  the largest single-block working set (attention score tile /
+             MoE dispatch buffers / MLP hidden), one layer live at a time
+  cache      decode only: KV cache / SSM state per device
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import InputShape, ModelConfig
+
+
+def _shard_factor(sharding, mesh) -> int:
+    factor = 1
+    spec = getattr(sharding, "spec", None)
+    if spec is None:
+        return 1
+    for dim_axes in spec:
+        if dim_axes is None:
+            continue
+        axes = dim_axes if isinstance(dim_axes, tuple) else (dim_axes,)
+        for a in axes:
+            factor *= mesh.shape[a]
+    return factor
+
+
+def sharded_bytes(sds_tree: Any, shardings: Any, mesh) -> int:
+    """Exact per-device bytes of a ShapeDtypeStruct tree under its shardings."""
+    total = 0
+    for leaf, sh in zip(jax.tree.leaves(sds_tree), jax.tree.leaves(shardings)):
+        total += int(np.prod(leaf.shape)) * leaf.dtype.itemsize // _shard_factor(sh, mesh)
+    return total
+
+
+def analytic_memory(
+    cfg: ModelConfig,
+    shape: InputShape,
+    mesh,
+    state_sds: Any,
+    state_shardings: Any,
+    params_sds: Any = None,
+    params_shardings: Any = None,
+    cache_sds: Any = None,
+    cache_shardings: Any = None,
+    n_micro: int = 1,
+) -> Dict[str, Any]:
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    tp = mesh.shape.get("model", 1)
+    act_bytes = 2 if cfg.compute_dtype == "bfloat16" else 4
+    b_loc = max(shape.global_batch // dp // max(n_micro, 1), 1)
+    t = shape.seq_len if shape.kind != "decode" else 1
+    d = cfg.d_model
+
+    out: Dict[str, Any] = {}
+    out["state_bytes"] = sharded_bytes(state_sds, state_shardings, mesh)
+
+    if shape.kind == "train" and params_sds is not None:
+        gb = sharded_bytes(params_sds, params_shardings, mesh)
+        if n_micro > 1:  # accumulated grads are f32
+            gb = sum(int(__import__('numpy').prod(l.shape)) * 4 // _shard_factor(sh, mesh)
+                     for l, sh in zip(jax.tree.leaves(params_sds),
+                                      jax.tree.leaves(params_shardings)))
+        out["grad_bytes"] = gb
+        n_blocks = cfg.n_layers + cfg.encoder_layers
+        sp = tp if (cfg.seq_parallel and t % tp == 0) else 1
+        out["residual_bytes"] = n_blocks * b_loc * t * d * act_bytes // sp
+
+    # largest transient inside one block (per device).  Attention scores are
+    # head-parallel when H divides |model|, else sequence(context)-parallel
+    # when T divides (see layers._sdpa); only if neither applies (decode with
+    # indivisible heads) are they replicated across the model axis.
+    h = cfg.n_heads
+    attn_shard = tp if (h % tp == 0 or (t > 1 and t % tp == 0)) else 1
+    s_ctx = t if shape.kind != "decode" else shape.seq_len
+    if cfg.sliding_window:
+        s_ctx = min(s_ctx, cfg.sliding_window)
+    if cfg.attention_impl == "blocked" and t > 1:
+        # online-softmax over key blocks: live scores are (..., T, blk) and
+        # the f32 accumulator is (..., T, hd)
+        s_ctx = min(s_ctx, cfg.attention_block)
+    ff_loc = cfg.d_ff // tp if cfg.d_ff % tp == 0 else cfg.d_ff
+    attn_bytes = 0.0
+    if cfg.family != "ssm":
+        attn_bytes = 2.0 * b_loc * h * t * s_ctx * 4 / attn_shard
+        if cfg.attention_impl == "blocked" and t > 1:
+            attn_bytes += 2.0 * b_loc * h * t * cfg.resolved_head_dim * 4 / attn_shard
+    candidates = [
+        attn_bytes,
+        3.0 * b_loc * t * ff_loc * act_bytes,
+    ]
+    if cfg.n_experts:
+        e_loc = max(cfg.n_experts // tp, 1)
+        cap = max(int(cfg.capacity_factor * t * cfg.moe_top_k / cfg.n_experts), 1)
+        candidates.append(3.0 * e_loc * b_loc * cap * d * act_bytes)
+    out["block_transient_bytes"] = float(max(candidates))
+
+    if cache_sds is not None:
+        out["cache_bytes"] = sharded_bytes(cache_sds, cache_shardings, mesh)
+
+    out["total_bytes"] = float(
+        sum(v for k, v in out.items() if k.endswith("_bytes") and k != "total_bytes")
+    )
+    out["fits_16gb"] = bool(out["total_bytes"] < 16e9)
+    return out

@@ -1,0 +1,127 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from
+results/dryrun/*.json.
+
+    PYTHONPATH=src python -m repro.roofline.report > /tmp/sections.md
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "..", ".."))
+
+from benchmarks.roofline_table import extrapolated_costs, load  # noqa: E402
+
+ARCHS = [
+    "rwkv6-3b", "qwen3-moe-30b-a3b", "qwen1.5-110b", "qwen1.5-0.5b",
+    "granite-moe-1b-a400m", "seamless-m4t-medium", "hymba-1.5b",
+    "paligemma-3b", "nemotron-4-340b", "llama3.2-3b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_s(x):
+    if x is None:
+        return "—"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}µs"
+
+
+def fmt_b(x):
+    if x is None:
+        return "—"
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if x >= div:
+            return f"{x / div:.1f}{unit}"
+    return f"{x:.0f}B"
+
+
+def dryrun_section():
+    lines = [
+        "| arch | shape | 16x16 | 2x16x16 | compile(s) | per-dev state | analytic mem | fits 16GB | collectives (AR/AG/RS/A2A) |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    n_ok = 0
+    for arch in ARCHS:
+        for shape in SHAPES:
+            base = load(arch, shape, "base")
+            pod2 = load(arch, shape, "pod2")
+            if base is None:
+                lines.append(f"| {arch} | {shape} | **FAIL** | — | | | | | |")
+                continue
+            n_ok += pod2 is not None
+            am = base["analytic_memory"]
+            c = base["collectives"]
+            coll = "/".join(fmt_b(c.get(t, 0)) for t in
+                            ("all-reduce", "all-gather", "reduce-scatter", "all-to-all"))
+            lines.append(
+                f"| {arch} | {shape} | ok ({base['compile_s']}s) | "
+                f"{'ok (' + str(pod2['compile_s']) + 's)' if pod2 else 'FAIL'} | "
+                f"{base['compile_s']} | {fmt_b(am['state_bytes'])} | "
+                f"{fmt_b(am['total_bytes'])} | {'yes' if am['fits_16gb'] else 'NO'} | {coll} |"
+            )
+    return "\n".join(lines), n_ok
+
+
+def roofline_section():
+    lines = [
+        "| arch | shape | compute | memory | collective | dominant | useful-FLOP ratio | what would move the dominant term |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    hints = {
+        ("moe", "collective_s"): "smaller capacity factor / sorted (ragged) dispatch instead of one-hot einsums",
+        ("moe", "memory_s"): "fuse dispatch+expert matmuls; drop f32 dispatch one-hots to bf16",
+        ("dense", "memory_s"): "flash-attention kernel (no T×S scores in HBM) + fp8/bf16 master weights",
+        ("dense", "collective_s"): "overlap FSDP all-gather with layer compute; reduce-scatter grads",
+        ("dense", "compute_s"): "near roofline — remat policy tuning (save attn outputs) trims recompute",
+        ("ssm", "memory_s"): "larger wkv chunk (more MXU work per HBM pass); fuse decay lora",
+        ("hybrid", "memory_s"): "flash attention for the attn branch; fuse SSM projections",
+        ("encdec", "memory_s"): "flash attention; cache encoder KV across decode steps",
+        ("vlm", "memory_s"): "flash attention over the long patch+text sequence",
+    }
+    from repro.configs import get_config
+
+    for arch in ARCHS:
+        fam = get_config(arch).family
+        for shape in SHAPES:
+            base = load(arch, shape, "base")
+            if base is None:
+                continue
+            ext = extrapolated_costs(arch, shape)
+            mf = base["roofline"]["model_flops_global"]
+            if ext:
+                ratio = mf / max(ext["hlo_flops"] * base["n_devices"], 1.0)
+                dom = ext["dominant"]
+                lines.append(
+                    f"| {arch} | {shape} | {fmt_s(ext['compute_s'])} | "
+                    f"{fmt_s(ext['memory_s'])} | {fmt_s(ext['collective_s'])} | "
+                    f"**{dom.replace('_s', '')}** | {ratio:.2f} | "
+                    f"{hints.get((fam, dom), 'see §Perf')} |"
+                )
+            else:
+                r = base["roofline"]
+                lines.append(
+                    f"| {arch} | {shape} | {fmt_s(r['compute_s'])}* | {fmt_s(r['memory_s'])}* | "
+                    f"{fmt_s(r['collective_s'])} | **{r['dominant'].replace('_s','')}** | — | "
+                    f"(*scan-mode lower bound) |"
+                )
+    return "\n".join(lines)
+
+
+def main():
+    dr, n_ok = dryrun_section()
+    print("## §Dry-run\n")
+    print(dr)
+    print(f"\nBoth-mesh pass count: {n_ok}/40\n")
+    print("## §Roofline\n")
+    print(roofline_section())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Activation-sharding context: models call `constrain(x, ...logical axes)`;
+launch code installs a resolver mapping logical axis names to mesh axes.
+
+Keeps the model code mesh-agnostic (smoke tests run with no resolver -> no-op)
+while letting the production launcher pin down activation layouts instead of
+trusting XLA's sharding propagation (which, e.g., happily replicates the batch
+axis and shards d_model when the embedding table's layout looks tempting).
+
+Logical activation axes:
+  batch   — data parallelism: ('pod','data')
+  tp      — tensor parallelism: ('model',)
+  experts — expert parallelism (MoE dispatch tensors): ('model',)
+  none    — explicitly replicated
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Callable, Optional, Tuple
+
+import jax
+
+_STATE = threading.local()
+
+
+def _resolver() -> Optional[Callable]:
+    return getattr(_STATE, "resolver", None)
+
+
+@contextlib.contextmanager
+def activation_sharding(resolver: Callable[[Tuple[str, ...], Tuple[int, ...]], object]):
+    """resolver(logical_dims, shape) -> PartitionSpec (or None to skip)."""
+    prev = _resolver()
+    _STATE.resolver = resolver
+    try:
+        yield
+    finally:
+        _STATE.resolver = prev
+
+
+def constrain(x: jax.Array, *logical: str) -> jax.Array:
+    fn = _resolver()
+    if fn is None:
+        return x
+    spec = fn(tuple(logical), tuple(x.shape))
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_alt(x: jax.Array, *alternatives: Tuple[str, ...]) -> jax.Array:
+    """Constrain with the FIRST alternative whose every non-'none' dim is
+    satisfiable (divisible by its mesh extent); no-op if none fits.
+
+    This is how e.g. attention picks head-sharding when the head count
+    divides the model axis and falls back to sequence (context) parallelism
+    otherwise (llama's 24 heads / hymba's 25 heads on a 16-way axis)."""
+    fn = _resolver()
+    if fn is None:
+        return x
+    for alt in alternatives:
+        spec = fn(tuple(alt), tuple(x.shape), strict=True)
+        if spec is not None:
+            return jax.lax.with_sharding_constraint(x, spec)
+    return x

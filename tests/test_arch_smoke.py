@@ -1,0 +1,143 @@
+"""Per-architecture smoke tests (deliverable f).
+
+For each of the 10 assigned architectures: instantiate the REDUCED variant of
+the same family (2 layers, d_model <= 512, <= 4 experts) and run one forward +
+one fastest-k train step on CPU, asserting output shapes and no NaNs.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_config, get_smoke_config, list_archs
+from repro.core import aggregation
+from repro.core.controller import PflugController
+from repro.core.straggler import Exponential
+from repro.models import build_model
+from repro.optim import apply_updates, sgd
+
+ARCHS = list_archs()
+N_WORKERS = 4
+B, T = 8, 32
+
+
+def _batch(cfg, key):
+    k1, k2 = jax.random.split(key)
+    toks = jax.random.randint(k1, (B, T), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "targets": jnp.roll(toks, -1, axis=1)}
+    if cfg.family == "vlm":
+        batch["patches"] = (
+            jax.random.normal(k2, (B, cfg.vlm_patches, cfg.d_model), jnp.float32) * 0.02
+        )
+    if cfg.family == "encdec":
+        batch["frames"] = (
+            jax.random.normal(k2, (B, cfg.encoder_frames, cfg.d_model), jnp.float32) * 0.02
+        )
+    return batch
+
+
+def test_all_archs_registered():
+    assert len(ARCHS) == 10
+    families = {get_config(a).family for a in ARCHS}
+    assert families == {"dense", "moe", "ssm", "hybrid", "encdec", "vlm"}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    expected = {
+        "rwkv6-3b": (32, 2560, 8960, 65536),
+        "qwen3-moe-30b-a3b": (48, 2048, 768, 151936),
+        "qwen1.5-110b": (80, 8192, 49152, 152064),
+        "qwen1.5-0.5b": (24, 1024, 2816, 151936),
+        "granite-moe-1b-a400m": (24, 1024, 512, 49155),
+        "seamless-m4t-medium": (12, 1024, 4096, 256206),
+        "hymba-1.5b": (32, 1600, 5504, 32001),
+        "paligemma-3b": (18, 2048, 16384, 257216),
+        "nemotron-4-340b": (96, 18432, 73728, 256000),
+        "llama3.2-3b": (28, 3072, 8192, 128256),
+    }[arch]
+    assert (cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab_size) == expected
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_variant_is_reduced(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.n_layers <= 2
+    assert cfg.d_model <= 512
+    assert cfg.n_experts <= 4
+    assert cfg.family == get_config(arch).family
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    per_row, metrics = jax.jit(model.loss_fn)(params, batch)
+    assert per_row.shape == (B,)
+    assert bool(jnp.all(jnp.isfinite(per_row)))
+    assert float(metrics["ce"]) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_fastest_k_train_step(arch):
+    """One adaptive fastest-k SGD step end-to-end on the smoke model."""
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    opt = sgd(lr=1e-2)
+    opt_state = opt.init(params)
+    controller = PflugController(n_workers=N_WORKERS, k0=2, step=1, thresh=2)
+    ctrl_state = controller.init(params)
+    straggler = Exponential(rate=1.0)
+
+    @jax.jit
+    def train_step(params, opt_state, ctrl_state, batch, key):
+        k = ctrl_state.k
+        weights, mask, t_iter = aggregation.fastest_k_iteration(
+            straggler, key, N_WORKERS, k, B // N_WORKERS
+        )
+
+        def loss(p):
+            per_row, metrics = model.loss_fn(p, batch)
+            return jnp.sum(weights * per_row), metrics
+
+        (val, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        ctrl_state, _ = controller.update(ctrl_state, grads, t_iter)
+        return params, opt_state, ctrl_state, val, metrics
+
+    before = float(model.loss_fn(params, batch)[1]["ce"])
+    for i in range(3):
+        params, opt_state, ctrl_state, val, metrics = train_step(
+            params, opt_state, ctrl_state, batch, jax.random.PRNGKey(i)
+        )
+        assert bool(jnp.isfinite(val))
+    after = float(model.loss_fn(params, batch)[1]["ce"])
+    assert jnp.isfinite(after)
+    leaves = jax.tree.leaves(params)
+    assert all(bool(jnp.all(jnp.isfinite(x))) for x in leaves)
+    assert after < before  # 3 steps on one repeated batch must reduce loss
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step_shapes(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cache_len = 16
+    cache = model.init_cache(2, cache_len)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    kw = {}
+    if cfg.family == "encdec":
+        kw["frames"] = jnp.zeros((2, cfg.encoder_frames, cfg.d_model), jnp.float32)
+    logits, new_cache = jax.jit(
+        lambda p, t, c, pos: model.decode_step(p, t, c, pos, **kw)
+    )(params, tok, cache, jnp.asarray(3, jnp.int32))
+    assert logits.shape == (2, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert jax.tree.structure(new_cache) == jax.tree.structure(cache)

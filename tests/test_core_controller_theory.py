@@ -1,0 +1,163 @@
+"""Tests for the adaptive controllers (Algorithm 1) and the theory module
+(Lemma 1 / Theorem 1 / Example 1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.controller import (
+    FixedKController,
+    PflugController,
+    ScheduleController,
+    VarianceRatioController,
+    get_controller,
+)
+from repro.core.theory import (
+    SGDSystem,
+    adaptive_bound_curve,
+    error_bound,
+    example1_system,
+    switching_times,
+)
+
+
+def _g(val):
+    """A toy gradient pytree."""
+    return {"w": jnp.asarray([val, val]), "b": jnp.asarray(val)}
+
+
+class TestPflug:
+    def test_increments_on_sign_flips_and_switches(self):
+        c = PflugController(n_workers=8, k0=1, step=2, thresh=2, burnin=0)
+        state = c.init(_g(0.0))
+        t = jnp.asarray(0.0)
+        # alternate gradient signs -> negative inner products accumulate
+        for i in range(10):
+            state, k = c.update(state, _g(1.0 if i % 2 == 0 else -1.0), t)
+        assert int(state.n_switches) >= 1
+        assert int(k) > 1
+
+    def test_no_switch_during_transient(self):
+        c = PflugController(n_workers=8, k0=1, step=1, thresh=3, burnin=0)
+        state = c.init(_g(0.0))
+        for _ in range(50):  # persistent gradient direction = transient phase
+            state, k = c.update(state, _g(1.0), jnp.asarray(0.0))
+        assert int(k) == 1 and int(state.n_switches) == 0
+
+    def test_first_iteration_emits_no_sign_event(self):
+        c = PflugController(n_workers=4, k0=1, thresh=0, burnin=0)
+        state = c.init(_g(0.0))
+        state, _ = c.update(state, _g(1.0), jnp.asarray(0.0))
+        # dot with zero prev_grad would be 0 (not negative); counter unchanged
+        assert int(state.count_negative) == 0
+
+    def test_k_capped_at_k_max(self):
+        c = PflugController(n_workers=8, k0=7, step=2, thresh=1, burnin=0, k_max=8)
+        state = c.init(_g(0.0))
+        for i in range(20):
+            state, k = c.update(state, _g(1.0 if i % 2 == 0 else -1.0), jnp.asarray(0.0))
+        assert int(k) == 7  # 7 + 2 > 8 so the switch is never allowed
+
+    def test_burnin_blocks_switch(self):
+        c = PflugController(n_workers=8, k0=1, step=1, thresh=1, burnin=100)
+        state = c.init(_g(0.0))
+        for i in range(50):
+            state, k = c.update(state, _g(1.0 if i % 2 == 0 else -1.0), jnp.asarray(0.0))
+        assert int(k) == 1
+
+    def test_jittable(self):
+        c = PflugController(n_workers=8, k0=1, step=1, thresh=2, burnin=0)
+        state = c.init(_g(0.0))
+
+        @jax.jit
+        def step(state, g):
+            return c.update(state, g, jnp.asarray(0.0))
+
+        for i in range(8):
+            state, k = step(state, _g(1.0 if i % 2 == 0 else -1.0))
+        assert k.dtype == jnp.int32
+
+
+def test_fixed_controller_constant():
+    c = FixedKController(n_workers=16, k=5)
+    state = c.init(_g(0.0))
+    for _ in range(3):
+        state, k = c.update(state, _g(1.0), jnp.asarray(0.0))
+        assert int(k) == 5
+
+
+def test_schedule_controller_follows_times():
+    c = ScheduleController(n_workers=8, switch_times=[10.0, 20.0, 30.0], k0=1, step=2)
+    state = c.init(_g(0.0))
+    _, k = c.update(state, _g(1.0), jnp.asarray(5.0))
+    assert int(k) == 1
+    _, k = c.update(state, _g(1.0), jnp.asarray(15.0))
+    assert int(k) == 3
+    _, k = c.update(state, _g(1.0), jnp.asarray(99.0))
+    assert int(k) == 7
+
+
+def test_variance_ratio_switches_on_decorrelated_grads():
+    c = VarianceRatioController(n_workers=8, k0=1, step=3, decay=0.5, ratio_thresh=0.3, burnin=5)
+    state = c.init(_g(0.0))
+    key = jax.random.PRNGKey(0)
+    for i in range(60):  # pure-noise gradients: ratio -> (1-d)/(1+d) ~ 0.33.. below thresh
+        key, sub = jax.random.split(key)
+        g = jax.tree.map(lambda x: jax.random.normal(sub, x.shape), _g(0.0))
+        state, k = c.update(state, g, jnp.asarray(0.0))
+    assert int(k) > 1
+
+    # persistent gradients: no switch
+    state = c.init(_g(0.0))
+    for _ in range(60):
+        state, k2 = c.update(state, _g(1.0), jnp.asarray(0.0))
+    assert int(k2) == 1
+
+
+def test_get_controller_registry():
+    assert isinstance(get_controller("pflug", 8), PflugController)
+    with pytest.raises(ValueError):
+        get_controller("nope", 8)
+
+
+# ---------------- theory ----------------
+
+
+class TestTheory:
+    def test_bound_decreases_to_floor(self):
+        sys = example1_system()
+        t = np.linspace(0, 1e5, 1000)
+        for k in range(1, 6):
+            b = error_bound(sys, k, t)
+            assert np.all(np.diff(b) <= 1e-12)  # monotone decreasing
+            assert b[-1] == pytest.approx(sys.error_floor(k), rel=1e-3)
+
+    def test_floor_decreases_in_k(self):
+        sys = example1_system()
+        floors = [sys.error_floor(k) for k in range(1, 6)]
+        assert all(b < a for a, b in zip(floors, floors[1:]))
+
+    def test_initial_decay_fastest_for_small_k(self):
+        sys = example1_system()
+        t = np.asarray([50.0])
+        bounds = [error_bound(sys, k, t)[0] for k in range(1, 6)]
+        assert bounds[0] == min(bounds)  # k=1 lowest early on
+
+    def test_switching_times_monotone(self):
+        ts = switching_times(example1_system())
+        assert len(ts) == 4
+        assert all(b >= a for a, b in zip(ts, ts[1:]))
+        assert all(t > 0 for t in ts)
+
+    def test_adaptive_envelope_dominates_every_fixed_k(self):
+        sys = example1_system()
+        grid = np.linspace(0, 6e4, 3000)
+        ad = adaptive_bound_curve(sys, grid)
+        for k in range(1, 6):
+            assert np.all(ad <= error_bound(sys, k, grid) + 1e-9)
+
+    def test_adaptive_reaches_best_floor(self):
+        sys = example1_system()
+        ad = adaptive_bound_curve(sys, np.asarray([1e6]))
+        assert ad[0] == pytest.approx(sys.error_floor(5), rel=1e-2)

@@ -1,0 +1,148 @@
+"""Unit + property tests for straggler models, order statistics, aggregation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import aggregation as agg
+from repro.core.straggler import (
+    Bimodal,
+    Deterministic,
+    Exponential,
+    Pareto,
+    ShiftedExponential,
+    _order_stat_moments,
+    get_straggler_model,
+)
+
+MODELS = [
+    Exponential(rate=2.0),
+    ShiftedExponential(shift=1.0, rate=1.5),
+    Pareto(x_m=1.0, alpha=3.0),
+    Bimodal(fast_mean=1.0, slow_mean=8.0, p_slow=0.2),
+    Deterministic(value=2.5),
+]
+
+
+@pytest.mark.parametrize("model", MODELS, ids=lambda m: type(m).__name__)
+def test_sample_shapes_positive(model):
+    t = model.sample(jax.random.PRNGKey(0), 64)
+    assert t.shape == (64,)
+    assert bool(jnp.all(t > 0))
+    assert bool(jnp.all(jnp.isfinite(t)))
+
+
+@pytest.mark.parametrize("model", MODELS, ids=lambda m: type(m).__name__)
+def test_mean_order_stat_monotone_in_k(model):
+    mus = [model.mean_order_statistic(k, 8) for k in range(1, 9)]
+    assert all(b >= a - 1e-9 for a, b in zip(mus, mus[1:]))
+
+
+def test_exponential_order_stat_matches_harmonic():
+    e = Exponential(rate=1.0)
+    # E[X_(k)] = H_n - H_{n-k}
+    H = lambda n: sum(1.0 / i for i in range(1, n + 1))
+    for n in (5, 50):
+        for k in (1, n // 2, n):
+            assert e.mean_order_statistic(k, n) == pytest.approx(H(n) - H(n - k), rel=1e-12)
+
+
+def test_quadrature_matches_analytic_shifted_exp():
+    se = ShiftedExponential(shift=0.7, rate=2.0)
+    for k, n in [(1, 5), (3, 10), (10, 10)]:
+        analytic = se.mean_order_statistic(k, n)
+        quad, _ = _order_stat_moments(se.quantile, k, n)
+        assert quad == pytest.approx(analytic, rel=2e-3)
+
+
+def test_empirical_order_stat_matches_expectation():
+    e = Exponential(rate=1.0)
+    n, k, reps = 10, 4, 4000
+    keys = jax.random.split(jax.random.PRNGKey(1), reps)
+    samples = jax.vmap(lambda kk: jnp.sort(e.sample(kk, n))[k - 1])(keys)
+    assert float(jnp.mean(samples)) == pytest.approx(e.mean_order_statistic(k, n), rel=0.05)
+
+
+def test_registry():
+    m = get_straggler_model("shifted_exponential", shift=2.0, rate=3.0)
+    assert isinstance(m, ShiftedExponential) and m.shift == 2.0
+    with pytest.raises(ValueError):
+        get_straggler_model("nope")
+
+
+# ---------------- aggregation ----------------
+
+
+@given(
+    n=st.integers(2, 32),
+    k=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_fastest_k_mask_has_exactly_k_ones(n, k, seed):
+    k = min(k, n)
+    times = jax.random.uniform(jax.random.PRNGKey(seed), (n,))
+    mask = agg.fastest_k_mask(times, jnp.asarray(k))
+    assert int(mask.sum()) == k
+    # masked workers are exactly the k smallest times
+    chosen = np.sort(np.asarray(times)[np.asarray(mask) > 0])
+    all_sorted = np.sort(np.asarray(times))
+    np.testing.assert_allclose(chosen, all_sorted[:k])
+
+
+def test_mask_handles_ties():
+    times = jnp.array([1.0, 1.0, 1.0, 1.0])
+    mask = agg.fastest_k_mask(times, jnp.asarray(2))
+    assert int(mask.sum()) == 2
+
+
+def test_iteration_time_is_kth_order_stat():
+    times = jnp.array([0.5, 0.1, 0.9, 0.3])
+    assert float(agg.iteration_time(times, jnp.asarray(1))) == pytest.approx(0.1)
+    assert float(agg.iteration_time(times, jnp.asarray(3))) == pytest.approx(0.5)
+    comm = agg.CommModel(alpha=1.0, beta=0.5)
+    assert float(agg.iteration_time(times, jnp.asarray(3), comm)) == pytest.approx(0.5 + 1.0 + 1.5)
+
+
+def test_per_example_weights_realize_eq2():
+    """grad of weighted loss == (1/k) sum_{i in R} (1/s) sum_{l in S_i} grad_l."""
+    n, s, d = 4, 3, 5
+    key = jax.random.PRNGKey(0)
+    X = jax.random.normal(key, (n * s, d))
+    y = jax.random.normal(jax.random.PRNGKey(1), (n * s,))
+    w = jax.random.normal(jax.random.PRNGKey(2), (d,))
+    times = jnp.array([0.4, 0.1, 0.9, 0.2])
+    k = jnp.asarray(2)
+    mask = agg.fastest_k_mask(times, k)
+    weights = agg.per_example_weights(mask, k, s)
+
+    loss_w = lambda w: jnp.sum(weights * (X @ w - y) ** 2)
+    g = jax.grad(loss_w)(w)
+
+    # reference: explicit eq. (2)
+    gs = []
+    for i in range(n):
+        if float(mask[i]) > 0:
+            Xi, yi = X[i * s : (i + 1) * s], y[i * s : (i + 1) * s]
+            gi = jax.grad(lambda w: jnp.mean((Xi @ w - yi) ** 2))(w)
+            gs.append(gi)
+    g_ref = sum(gs) / len(gs)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref), rtol=1e-5)
+
+
+def test_weights_are_jittable_with_traced_k():
+    n, s = 8, 4
+
+    @jax.jit
+    def f(key, k):
+        times = Exponential().sample(key, n)
+        mask = agg.fastest_k_mask(times, k)
+        return agg.per_example_weights(mask, k, s)
+
+    w1 = f(jax.random.PRNGKey(0), jnp.asarray(2))
+    w2 = f(jax.random.PRNGKey(0), jnp.asarray(5))  # same compiled fn, new k
+    assert w1.shape == (n * s,)
+    assert float(jnp.count_nonzero(w2)) == 5 * s

@@ -1,0 +1,64 @@
+"""Integration test of the real dry-run path: one representative
+(arch x shape x mesh) combination per step-kind, run in a subprocess (the
+512-placeholder-device XLA flag must be set before jax init, so it cannot run
+in-process with the rest of the suite).
+
+The full 160-job matrix lives in `python -m repro.launch.dryrun_all`; these
+tests keep the lowering path from regressing without paying that cost in CI.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_dryrun(*args, timeout=900):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args],
+        capture_output=True, text=True, timeout=timeout, env=env, cwd=REPO,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return json.loads(proc.stdout[proc.stdout.index("{"):])
+
+
+@pytest.mark.slow
+def test_dryrun_train_single_pod():
+    out = _run_dryrun("--arch", "qwen1.5-0.5b", "--shape", "train_4k")
+    assert out["n_devices"] == 256
+    r = out["roofline"]
+    assert r["hlo_flops"] > 0 and r["collective_bytes"] > 0
+    assert out["analytic_memory"]["fits_16gb"]
+
+
+@pytest.mark.slow
+def test_dryrun_decode_multi_pod():
+    out = _run_dryrun("--arch", "llama3.2-3b", "--shape", "decode_32k", "--multi-pod")
+    assert out["n_devices"] == 512
+    assert out["mesh"] == "2x16x16"
+
+
+@pytest.mark.slow
+def test_dryrun_long_context_ssm():
+    out = _run_dryrun("--arch", "rwkv6-3b", "--shape", "long_500k")
+    # O(1)-state decode: per-device analytic memory far below HBM
+    assert out["analytic_memory"]["total_bytes"] < 1e9
+
+
+@pytest.mark.slow
+def test_dryrun_optimized_nemotron_fits():
+    """The §Perf pair-2 configuration must keep fitting 16 GB."""
+    out = _run_dryrun(
+        "--arch", "nemotron-4-340b", "--shape", "train_4k",
+        "--override", 'controller="sketched"',
+        "--override", "n_micro=16",
+        "--override", "seq_parallel=true",
+        "--override", 'moments_dtype="bfloat16"',
+        timeout=1800,
+    )
+    assert out["analytic_memory"]["fits_16gb"], out["analytic_memory"]

@@ -1,0 +1,215 @@
+"""Model-level correctness: prefill+decode == full forward; chunked linear
+scans == naive recurrences; attention masks; MoE properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.models import layers, linear_scan, moe
+
+
+def _prefill_decode_consistency(arch, window=0, cf=None):
+    cfg = get_smoke_config(arch)
+    if cf is not None:
+        cfg = cfg.replace(capacity_factor=cf)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, T = 2, 32
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0, cfg.vocab_size)
+    batch = {"tokens": toks}
+    if cfg.family == "vlm":
+        batch["patches"] = (
+            jax.random.normal(jax.random.PRNGKey(2), (B, cfg.vlm_patches, cfg.d_model)) * 0.02
+        )
+    if cfg.family == "encdec":
+        batch["frames"] = (
+            jax.random.normal(jax.random.PRNGKey(2), (B, cfg.encoder_frames, cfg.d_model)) * 0.02
+        )
+
+    lg_full, _ = model.prefill(params, batch, window=window)
+
+    batch2 = dict(batch)
+    batch2["tokens"] = toks[:, : T - 1]
+    _, cache = model.prefill(params, batch2, window=window)
+    npfx = cfg.vlm_patches if cfg.family == "vlm" else 0
+    pos = jnp.asarray(T - 1 + npfx, jnp.int32)
+    if cfg.family != "ssm":
+        need = window if window else (T + npfx)
+        cur = cache["k"].shape[2]
+        if cur < need:
+            pad = need - cur
+            cache = dict(cache)
+            cache["k"] = jnp.pad(cache["k"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            cache["v"] = jnp.pad(cache["v"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    kw = {"window": window}
+    if cfg.family == "encdec":
+        kw["frames"] = batch["frames"]
+    lg_dec, _ = model.decode_step(params, toks[:, T - 1 : T], cache, pos, **kw)
+    np.testing.assert_allclose(
+        np.asarray(lg_full), np.asarray(lg_dec), rtol=2e-3, atol=2e-4
+    )
+
+
+@pytest.mark.parametrize(
+    "arch",
+    [
+        "llama3.2-3b",
+        "qwen1.5-0.5b",
+        "nemotron-4-340b",
+        "rwkv6-3b",
+        "hymba-1.5b",
+        "paligemma-3b",
+        "seamless-m4t-medium",
+    ],
+)
+def test_prefill_decode_consistency(arch):
+    _prefill_decode_consistency(arch)
+
+
+def test_prefill_decode_consistency_moe_no_drop():
+    # capacity dropping differs between prefill and decode by design; with a
+    # no-drop capacity factor the two paths must agree exactly.
+    _prefill_decode_consistency("qwen3-moe-30b-a3b", cf=4.0)
+    _prefill_decode_consistency("granite-moe-1b-a400m", cf=4.0)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "hymba-1.5b"])
+def test_prefill_decode_consistency_sliding_window(arch):
+    _prefill_decode_consistency(arch, window=16)
+
+
+# ------------------------------------------------------------------ scans
+
+
+def test_wkv6_chunked_matches_step_recurrence():
+    key = jax.random.PRNGKey(0)
+    B, T, H, K, V = 2, 64, 3, 8, 8
+    ks = jax.random.split(key, 5)
+    r = jax.random.normal(ks[0], (B, T, H, K))
+    k = jax.random.normal(ks[1], (B, T, H, K))
+    v = jax.random.normal(ks[2], (B, T, H, V))
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, T, H, K)) * 0.5))
+    u = jax.random.normal(ks[4], (H, K)) * 0.1
+
+    s = jnp.zeros((B, H, K, V))
+    ys = []
+    for t in range(T):
+        y, s = linear_scan.wkv6_step(r[:, t], k[:, t], v[:, t], w[:, t], u, s)
+        ys.append(y)
+    y_ref = jnp.stack(ys, 1)
+    for chunk in (8, 16, 32):
+        y, sf = linear_scan.wkv6_chunked(r, k, v, w, u, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(sf), np.asarray(s), atol=1e-4)
+
+
+def test_wkv6_chunked_respects_initial_state():
+    key = jax.random.PRNGKey(3)
+    B, T, H, K, V = 1, 16, 2, 4, 4
+    ks = jax.random.split(key, 6)
+    r = jax.random.normal(ks[0], (B, T, H, K))
+    k = jax.random.normal(ks[1], (B, T, H, K))
+    v = jax.random.normal(ks[2], (B, T, H, V))
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, T, H, K)) * 0.3))
+    u = jax.random.normal(ks[4], (H, K)) * 0.1
+    s0 = jax.random.normal(ks[5], (B, H, K, V))
+    # running two halves with carried state == running the whole thing
+    y1, s1 = linear_scan.wkv6_chunked(r[:, :8], k[:, :8], v[:, :8], w[:, :8], u, s0, chunk=8)
+    y2, s2 = linear_scan.wkv6_chunked(r[:, 8:], k[:, 8:], v[:, 8:], w[:, 8:], u, s1, chunk=8)
+    y, sf = linear_scan.wkv6_chunked(r, k, v, w, u, s0, chunk=8)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)), np.asarray(y), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(sf), atol=1e-4)
+
+
+def test_ssm_chunked_matches_step_recurrence():
+    key = jax.random.PRNGKey(1)
+    B, T, H, P, N = 2, 64, 3, 8, 4
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, T, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H)))
+    a = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    bm = jax.random.normal(ks[3], (B, T, H, N))
+    cm = jax.random.normal(ks[4], (B, T, H, N))
+    s = jnp.zeros((B, H, N, P))
+    ys = []
+    for t in range(T):
+        y, s = linear_scan.ssm_step(x[:, t], dt[:, t], a, bm[:, t], cm[:, t], s)
+        ys.append(y)
+    y_ref = jnp.stack(ys, 1)
+    for chunk in (8, 16, 32):
+        y, sf = linear_scan.ssm_chunked(x, dt, a, bm, cm, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(sf), np.asarray(s), atol=1e-4)
+
+
+# -------------------------------------------------------------- attention
+
+
+def test_causal_window_mask():
+    m = layers.causal_window_mask(4, 4, 0, 0)
+    assert bool(m[2, 2]) and bool(m[3, 0]) and not bool(m[0, 1])
+    m = layers.causal_window_mask(4, 4, 0, 2)  # window 2: j in {i-1, i}
+    assert bool(m[3, 2]) and bool(m[3, 3]) and not bool(m[3, 1])
+
+
+def test_sliding_window_attention_equals_masked_full():
+    cfg = get_smoke_config("llama3.2-3b")
+    key = jax.random.PRNGKey(0)
+    p = layers.attention_init(key, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model)) * 0.1
+    pos = jnp.arange(16)
+    y_full = layers.attention_full(p, cfg, x, pos, window=4)
+    # reference: explicit mask
+    q, k, v = layers._qkv(p, cfg, x)
+    q = layers.rope(q, pos, cfg.rope_theta)
+    k = layers.rope(k, pos, cfg.rope_theta)
+    mask = layers.causal_window_mask(16, 16, 0, 4)
+    out = layers._sdpa(cfg, q, k, v, mask)
+    y_ref = jnp.einsum("bthk,hkd->btd", out, p["wo"])
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_ref), atol=1e-5)
+
+
+def test_gqa_reduces_to_mha_when_equal_heads():
+    cfg = get_smoke_config("qwen1.5-0.5b")  # kv == heads (MHA)
+    assert cfg.n_heads == cfg.n_kv_heads
+    p = layers.attention_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, cfg.d_model)) * 0.1
+    y = layers.attention_full(p, cfg, x, jnp.arange(8))
+    assert y.shape == x.shape
+
+
+# -------------------------------------------------------------------- moe
+
+
+def test_moe_capacity_drops_and_aux_loss():
+    cfg = get_smoke_config("granite-moe-1b-a400m").replace(capacity_factor=0.5)
+    p = moe.moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model)) * 0.1
+    y, aux = moe.moe_layer(p, cfg, x)
+    assert y.shape == x.shape
+    assert float(aux) >= 1.0 - 1e-3  # load-balance loss >= 1 (perfect balance = 1)
+
+
+def test_moe_full_capacity_matches_dense_expert_mixture():
+    """With capacity >= tokens (no drops), the capacity dispatch must equal the
+    naive 'compute every expert densely and mix' reference."""
+    cfg = get_smoke_config("granite-moe-1b-a400m").replace(capacity_factor=8.0)
+    p = moe.moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model)) * 0.1
+    y, _ = moe.moe_layer(p, cfg, x)
+
+    logits = x.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    top_p, top_i = jax.lax.top_k(probs, cfg.moe_top_k)
+    top_p = top_p / top_p.sum(-1, keepdims=True)
+    dense = jnp.einsum("gsd,edf->gsef", x, p["w_gate"])
+    dense = jax.nn.silu(dense) * jnp.einsum("gsd,edf->gsef", x, p["w_in"])
+    dense = jnp.einsum("gsef,efd->gsed", dense, p["w_out"])
+    mix = jnp.zeros_like(x)
+    for kk in range(cfg.moe_top_k):
+        sel = jnp.take_along_axis(dense, top_i[..., kk][..., None, None], axis=2)[:, :, 0]
+        mix = mix + top_p[..., kk][..., None] * sel
+    np.testing.assert_allclose(np.asarray(y), np.asarray(mix), atol=1e-4)

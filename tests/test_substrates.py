@@ -1,0 +1,132 @@
+"""Tests for optimizers, data pipeline, checkpointing."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint
+from repro.data import TokenStream, make_linreg_data
+from repro.optim import adam, adamw, apply_updates, chain_clip, clip_by_global_norm, sgd
+from repro.optim.optimizers import get_optimizer
+
+
+def _quadratic_params():
+    return {"w": jnp.asarray([3.0, -2.0]), "b": jnp.asarray(1.5)}
+
+
+def _loss(p):
+    return jnp.sum(p["w"] ** 2) + p["b"] ** 2
+
+
+@pytest.mark.parametrize("opt_name", ["sgd", "adam", "adamw"])
+def test_optimizers_descend_quadratic(opt_name):
+    opt = get_optimizer(opt_name, lr=0.1)
+    params = _quadratic_params()
+    state = opt.init(params)
+    losses = []
+    for _ in range(50):
+        grads = jax.grad(_loss)(params)
+        updates, state = opt.update(grads, state, params)
+        params = apply_updates(params, updates)
+        losses.append(float(_loss(params)))
+    assert losses[-1] < 0.1 * losses[0]
+
+
+def test_sgd_momentum_accelerates():
+    params = _quadratic_params()
+    for momentum in (0.0, 0.9):
+        opt = sgd(lr=0.02, momentum=momentum)
+        p, state = params, opt.init(params)
+        for _ in range(30):
+            g = jax.grad(_loss)(p)
+            u, state = opt.update(g, state, p)
+            p = apply_updates(p, u)
+        if momentum == 0.0:
+            plain = float(_loss(p))
+        else:
+            assert float(_loss(p)) < plain
+
+
+def test_adamw_decays_weights():
+    opt = adamw(lr=0.1, weight_decay=0.5)
+    params = {"w": jnp.asarray([10.0])}
+    state = opt.init(params)
+    zero_grads = {"w": jnp.asarray([0.0])}
+    u, state = opt.update(zero_grads, state, params)
+    assert float(u["w"][0]) < 0  # pure decay pulls toward zero
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(grads, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(1.0, rel=1e-5)
+    opt = chain_clip(sgd(lr=1.0), 1.0)
+    u, _ = opt.update(grads, opt.init(grads), grads)
+    assert float(jnp.linalg.norm(u["a"])) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_opt_state_mirrors_param_tree():
+    opt = adam(lr=1e-3)
+    params = {"layers": {"wq": jnp.zeros((2, 3))}, "embed": jnp.zeros((5,))}
+    state = opt.init(params)
+    assert jax.tree.structure(state.mu) == jax.tree.structure(params)
+
+
+# ---------------------------------------------------------------- data
+
+
+def test_linreg_matches_paper_recipe():
+    d = make_linreg_data(jax.random.PRNGKey(0), m=200, d=10)
+    X = np.asarray(d.X)
+    assert X.min() >= 1 and X.max() <= 10
+    assert d.y.shape == (200,)
+    assert d.f_star < 2.0  # noise variance is 1
+
+
+def test_token_stream_deterministic_and_shifted():
+    ts = TokenStream(vocab_size=64, seq_len=16, global_batch=4, seed=3)
+    t1, y1 = ts.batch_at(7)
+    t2, y2 = ts.batch_at(7)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+    np.testing.assert_array_equal(np.asarray(t1[:, 1:]), np.asarray(y1[:, :-1]))
+    t3, _ = ts.batch_at(8)
+    assert not np.array_equal(np.asarray(t1), np.asarray(t3))
+
+
+def test_token_stream_learnable_structure():
+    ts = TokenStream(vocab_size=64, seq_len=128, global_batch=8, seed=0, correlation=0.9)
+    toks, targets = ts.batch_at(0)
+    # with corr 0.9, target == token+1 mod V much more often than chance
+    frac = float(jnp.mean((targets == (toks + 1) % 64).astype(jnp.float32)))
+    assert frac > 0.5
+
+
+# ------------------------------------------------------------ checkpoint
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"params": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)},
+            "step": jnp.asarray(7, jnp.int32)}
+    d = str(tmp_path / "ckpt")
+    checkpoint.save(d, 7, tree)
+    checkpoint.save(d, 12, jax.tree.map(lambda x: x + 1, tree))
+    assert checkpoint.latest_step(d) == 12
+    restored = checkpoint.restore(d, 7, tree)
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(tree["params"]["w"]))
+    assert restored["step"].dtype == jnp.int32
+
+
+def test_checkpoint_structure_mismatch_raises(tmp_path):
+    d = str(tmp_path / "ckpt")
+    checkpoint.save(d, 1, {"a": jnp.zeros(3)})
+    with pytest.raises(ValueError, match="tree mismatch"):
+        checkpoint.restore(d, 1, {"b": jnp.zeros(3)})
+
+
+def test_checkpoint_latest_none_for_missing(tmp_path):
+    assert checkpoint.latest_step(str(tmp_path / "nope")) is None
