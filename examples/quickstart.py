@@ -2,6 +2,9 @@
 
 A master with n=20 simulated workers runs linear regression; Algorithm 1's
 Pflug test detects the transient->stationary phase transition and raises k.
+Each config runs R=16 Monte-Carlo replicas as ONE jitted program (scan over
+iterations, vmap over seeds), so the printed trajectories are mean +/- 95% CI
+rather than a single seed.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,9 +13,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.controller import FixedKController, PflugController
-from repro.core.simulate import simulate_fastest_k
+from repro.core.montecarlo import run_monte_carlo, summarize
 from repro.core.straggler import Exponential
+
 from repro.data import make_linreg_data
+
+R = 16  # Monte-Carlo replicas (all run in one compiled program)
 
 
 def main():
@@ -21,34 +27,35 @@ def main():
     L = 2 * float(jnp.linalg.eigvalsh(data.X.T @ data.X / 400).max())
     eta = 0.5 / L
     w0 = jnp.zeros((20,))
+    keys = jax.random.split(jax.random.PRNGKey(1), R)
 
-    print("== adaptive fastest-k (Algorithm 1) ==")
-    hist = simulate_fastest_k(
-        (lambda w, X, y: (X @ w - y) ** 2), w0, data.X, data.y,
-        n_workers=n_workers,
-        controller=PflugController(n_workers=n_workers, k0=2, step=4,
-                                   thresh=10, burnin=40),
-        straggler=Exponential(rate=1.0),
-        eta=eta, num_iters=8000, key=jax.random.PRNGKey(1), eval_every=1000,
-    )
-    for t, l, k in zip(hist["time"], hist["loss"], hist["k"]):
-        print(f"  sim_time={t:8.1f}  loss={l - data.f_star:10.4g}  k={k}")
+    def mc(controller):
+        return summarize(run_monte_carlo(
+            (lambda w, X, y: (X @ w - y) ** 2), w0, data.X, data.y,
+            n_workers=n_workers, controller=controller,
+            straggler=Exponential(rate=1.0),
+            eta=eta, num_iters=8000, keys=keys, eval_every=1000,
+        ))
+
+    print(f"== adaptive fastest-k (Algorithm 1), mean +- 95% CI over R={R} ==")
+    hist = mc(PflugController(n_workers=n_workers, k0=2, step=4,
+                              thresh=10, burnin=40))
+    for i in range(len(hist["iteration"])):
+        print(f"  sim_time={hist['time_mean'][i]:8.1f}  "
+              f"loss={hist['loss_mean'][i] - data.f_star:10.4g}"
+              f" +-{hist['loss_ci95'][i]:8.2g}  k={hist['k_mean'][i]:5.2f}")
 
     print("== non-adaptive fixed k=2 (paper baseline) ==")
-    hist_f = simulate_fastest_k(
-        (lambda w, X, y: (X @ w - y) ** 2), w0, data.X, data.y,
-        n_workers=n_workers,
-        controller=FixedKController(n_workers=n_workers, k=2),
-        straggler=Exponential(rate=1.0),
-        eta=eta, num_iters=8000, key=jax.random.PRNGKey(1), eval_every=1000,
-    )
-    for t, l in zip(hist_f["time"], hist_f["loss"]):
-        print(f"  sim_time={t:8.1f}  loss={l - data.f_star:10.4g}")
+    hist_f = mc(FixedKController(n_workers=n_workers, k=2))
+    for i in range(len(hist_f["iteration"])):
+        print(f"  sim_time={hist_f['time_mean'][i]:8.1f}  "
+              f"loss={hist_f['loss_mean'][i] - data.f_star:10.4g}"
+              f" +-{hist_f['loss_ci95'][i]:8.2g}")
 
-    adaptive_floor = hist["loss"][-1] - data.f_star
-    fixed_floor = hist_f["loss"][-1] - data.f_star
+    adaptive_floor = hist["loss_mean"][-1] - data.f_star
+    fixed_floor = hist_f["loss_mean"][-1] - data.f_star
     print(f"\nadaptive error floor {adaptive_floor:.4g} vs fixed-k=2 {fixed_floor:.4g} "
-          f"(adaptive k ended at {hist['k'][-1]})")
+          f"(adaptive k ended at {hist['k_mean'][-1]:.2f} on average)")
 
 
 if __name__ == "__main__":

@@ -3,20 +3,40 @@
 Modules:
   straggler    — iid response-time models + order statistics
   aggregation  — fastest-k masks / per-example weights / renewal clock
-  controller   — Algorithm-1 Pflug controller, fixed-k, Theorem-1 schedule,
-                 variance-ratio (beyond paper)
+  controller   — Algorithm-1 Pflug controller, sketched Pflug, fixed-k,
+                 Theorem-1 schedule, variance-ratio (beyond paper)
   theory       — Lemma-1 bound, Theorem-1 switching times (Example 1 / Fig 1)
-  simulate     — paper-scale host-loop simulator (Figs 2–3)
+  montecarlo   — vectorized Monte-Carlo engine: R replicas of the fastest-k
+                 simulation as one jitted program (scan over iterations,
+                 vmap over replica seeds, in-graph periodic loss eval)
+  simulate     — single-trajectory R=1 wrapper over the engine (Figs 2-3)
   async_sim    — event-driven asynchronous-SGD baseline
+
+Monte-Carlo engine API (the harness behind every scenario sweep)::
+
+    from repro.core import run_monte_carlo, summarize
+    result = run_monte_carlo(
+        per_example_loss_fn, params0, X, y, n_workers=n,
+        controller=get_controller("pflug", n), straggler=Exponential(),
+        eta=eta, num_iters=T, key=key, n_replicas=32, eval_every=500,
+    )                       # result.{time,loss,k}: (R, n_evals) arrays
+    stats = summarize(result)   # {'time_mean','loss_ci95',...} over replicas
+
+Any controller registered in ``get_controller`` and any straggler model from
+``get_straggler_model`` compose with the engine: the controller's state is an
+opaque pytree threaded through the scan carry, so new policies need only
+``init``/``update``.
 """
 
-from repro.core import aggregation, controller, straggler, theory  # noqa: F401
+from repro.core import aggregation, controller, montecarlo, straggler, theory  # noqa: F401
 from repro.core.aggregation import CommModel, fastest_k_mask, iteration_time  # noqa: F401
 from repro.core.controller import (  # noqa: F401
     FixedKController,
     PflugController,
     ScheduleController,
+    SketchedPflugController,
     VarianceRatioController,
     get_controller,
 )
+from repro.core.montecarlo import MonteCarloResult, run_monte_carlo, summarize  # noqa: F401
 from repro.core.straggler import get_straggler_model  # noqa: F401

@@ -36,6 +36,7 @@ from repro.core.straggler import StragglerModel
 __all__ = [
     "CommModel",
     "sample_worker_times",
+    "worker_ranks",
     "fastest_k_mask",
     "iteration_time",
     "per_example_weights",
@@ -64,27 +65,47 @@ def sample_worker_times(model: StragglerModel, key: jax.Array, n_workers: int) -
     return model.sample(key, n_workers)
 
 
+def worker_ranks(times: jax.Array) -> jax.Array:
+    """Stable rank of each entry (0 = smallest), ties broken by index.
+
+    Computed with O(n^2) pairwise comparisons instead of a sort: for the small
+    n of the simulation layer this is dramatically cheaper than XLA's sort on
+    CPU — especially batched under vmap inside a scan, the Monte-Carlo
+    engine's hot path — and it is exactly equivalent to the rank a stable
+    argsort assigns.
+    """
+    idx = jnp.arange(times.shape[0])
+    before = (times[None, :] < times[:, None]) | (
+        (times[None, :] == times[:, None]) & (idx[None, :] < idx[:, None])
+    )
+    return jnp.sum(before, axis=1).astype(jnp.int32)
+
+
 def fastest_k_mask(times: jax.Array, k: jax.Array) -> jax.Array:
     """{0,1} mask of the k smallest entries of `times` (exactly k ones).
 
     `k` may be a traced int32 scalar (1 <= k <= n) — we rank rather than
     threshold so ties cannot produce more than k participants.
     """
-    n = times.shape[0]
-    order = jnp.argsort(times)  # order[r] = index of rank-r worker
-    ranks = jnp.zeros((n,), dtype=jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
-    return (ranks < k).astype(times.dtype)
+    return (worker_ranks(times) < k).astype(times.dtype)
+
+
+def _time_from_ranks(
+    ranks: jax.Array, times: jax.Array, k: jax.Array, comm: Optional[CommModel]
+) -> jax.Array:
+    """k-th order statistic of `times` given precomputed ranks (+ comm)."""
+    rank_wanted = jnp.clip(k - 1, 0, times.shape[0] - 1)
+    t = jnp.sum(jnp.where(ranks == rank_wanted, times, 0.0))
+    if comm is not None:
+        t = t + comm.time(k)
+    return t
 
 
 def iteration_time(
     times: jax.Array, k: jax.Array, comm: Optional[CommModel] = None
 ) -> jax.Array:
     """Simulated duration of one fastest-k iteration: X_(k) (+ comm)."""
-    sorted_times = jnp.sort(times)
-    t = jnp.take(sorted_times, k - 1)  # k-th order statistic
-    if comm is not None:
-        t = t + comm.time(k)
-    return t
+    return _time_from_ranks(worker_ranks(times), times, k, comm)
 
 
 def per_example_weights(
@@ -114,9 +135,15 @@ def fastest_k_iteration(
     examples_per_worker: int,
     comm: Optional[CommModel] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Convenience bundle: (per-example weights, iteration mask, iteration time)."""
+    """Convenience bundle: (per-example weights, iteration mask, iteration time).
+
+    Ranks are computed once and shared between the mask and the k-th order
+    statistic (the standalone `fastest_k_mask`/`iteration_time` each rank on
+    their own) — this is the Monte-Carlo engine's per-iteration hot path.
+    """
     times = sample_worker_times(model, key, n_workers)
-    mask = fastest_k_mask(times, k)
+    ranks = worker_ranks(times)
+    mask = (ranks < k).astype(times.dtype)
     weights = per_example_weights(mask, k, examples_per_worker)
-    t = iteration_time(times, k, comm)
+    t = _time_from_ranks(ranks, times, k, comm)
     return weights, mask, t

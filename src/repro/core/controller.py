@@ -16,6 +16,7 @@ All controllers share the same interface so the train step is policy-agnostic:
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Any, NamedTuple, Sequence
 
 import jax
@@ -24,9 +25,12 @@ import jax.numpy as jnp
 __all__ = [
     "PflugState",
     "PflugController",
+    "SketchedPflugState",
+    "SketchedPflugController",
     "FixedKController",
     "ScheduleController",
     "VarianceRatioController",
+    "get_controller",
 ]
 
 
@@ -156,7 +160,11 @@ class SketchedPflugController:
         m = self.sketch_dim
         z = jnp.zeros((m,), jnp.float32)
         for path, g in leaves:
-            leaf_seed = self.seed + (hash(jax.tree_util.keystr(path)) % (2**30))
+            # Stable digest of the key path: builtin hash() varies per process
+            # under PYTHONHASHSEED, which would make sketches (and hence
+            # k-switch decisions) irreproducible across runs.
+            digest = zlib.crc32(jax.tree_util.keystr(path).encode("utf-8"))
+            leaf_seed = self.seed + (digest % (2**30))
             key = jax.random.PRNGKey(leaf_seed)
             signs = jax.random.rademacher(key, g.shape, dtype=jnp.float32)
             t = (signs * g.astype(jnp.float32)).reshape(-1)
@@ -322,6 +330,7 @@ class VarianceRatioController:
 def get_controller(name: str, n_workers: int, **kw):
     registry = {
         "pflug": PflugController,
+        "sketched_pflug": SketchedPflugController,
         "fixed": FixedKController,
         "schedule": ScheduleController,
         "variance_ratio": VarianceRatioController,

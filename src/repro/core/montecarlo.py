@@ -1,0 +1,196 @@
+"""Vectorized Monte-Carlo engine for (adaptive) fastest-k SGD.
+
+The paper's headline artifacts (Figs. 2-3) are *distributions* of
+error-vs-wall-clock trajectories over many seeds, not single runs.  This
+module runs R independent replicas of the fastest-k simulation as **one**
+compiled XLA program:
+
+  * ``jax.lax.scan`` over iterations (grouped into eval blocks),
+  * ``jax.vmap`` over replica PRNG keys,
+  * periodic loss evaluation *inside* the scan — the host sees nothing
+    until the whole R-replica trajectory tensor is materialized,
+  * any registered controller/straggler-model pair threaded through a
+    single policy-agnostic carry (the controller contributes an opaque
+    pytree state via its ``init``/``update`` interface).
+
+``repro.core.simulate.simulate_fastest_k`` is a thin R=1 wrapper over this
+engine; benchmarks drive it directly with R >= 32 to emit mean +/- 95% CI
+bands from a single jitted dispatch.
+
+API sketch::
+
+    keys = jax.random.split(jax.random.PRNGKey(0), 32)
+    result = run_monte_carlo(
+        per_example_loss_fn, w0, X, y, n_workers=50,
+        controller=PflugController(n_workers=50), straggler=Exponential(),
+        eta=1e-2, num_iters=40_000, keys=keys, eval_every=500,
+    )
+    stats = summarize(result)   # mean / ci95 arrays over the replica axis
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation
+from repro.core.straggler import StragglerModel
+
+__all__ = ["MonteCarloResult", "run_monte_carlo", "summarize"]
+
+_Z95 = 1.959963984540054  # two-sided 95% normal quantile
+
+
+class _Carry(NamedTuple):
+    params: object
+    ctrl_state: object  # opaque controller pytree — policy-agnostic
+    sim_time: jax.Array
+    key: jax.Array
+
+
+class MonteCarloResult(NamedTuple):
+    """Eval-point trajectories for R replicas.
+
+    ``time``/``loss``/``k`` have shape (R, n_evals); ``iteration`` has shape
+    (n_evals,) and gives the iteration count at each eval point (multiples of
+    ``eval_every``, with a final partial point at ``num_iters`` when it is
+    not a multiple).
+    """
+
+    time: jax.Array
+    loss: jax.Array
+    k: jax.Array
+    iteration: np.ndarray
+
+
+def run_monte_carlo(
+    per_example_loss_fn: Callable,  # (params, X, y) -> per-example losses (m,)
+    params0,
+    X: jax.Array,
+    y: jax.Array,
+    n_workers: int,
+    controller,
+    straggler: StragglerModel,
+    eta: float,
+    num_iters: int,
+    keys: jax.Array | None = None,
+    key: jax.Array | None = None,
+    n_replicas: int | None = None,
+    comm: aggregation.CommModel | None = None,
+    eval_every: int = 10,
+    unroll: int = 8,
+) -> MonteCarloResult:
+    """Run R independent fastest-k SGD replicas in one jitted program.
+
+    Replicas are specified either by ``keys`` (an array of R PRNG keys,
+    vmapped over axis 0) or by ``key`` + ``n_replicas`` (split internally).
+    Each replica reproduces exactly the trajectory the R=1 path
+    (``simulate_fastest_k``) produces for its key: the per-iteration RNG
+    split, fastest-k masking, SGD update and controller update are shared
+    code paths.
+
+    Every worker owns a contiguous shard of m/n examples (the paper's
+    horizontal partition); each participating worker contributes the full
+    partial gradient over its shard — eq. (2) — realized as the gradient of
+    the fastest-k weighted loss.
+    """
+    if keys is None:
+        if key is None or n_replicas is None:
+            raise ValueError("pass either keys=(R keys) or key= and n_replicas=")
+        keys = jax.random.split(key, n_replicas)
+    m = X.shape[0]
+    if m % n_workers:
+        raise ValueError(f"m={m} not divisible by n_workers={n_workers}")
+    if eval_every <= 0:
+        raise ValueError(f"eval_every must be positive, got {eval_every}")
+    if num_iters <= 0:
+        raise ValueError(f"num_iters must be positive, got {num_iters}")
+    s = m // n_workers
+    n_full, rem = divmod(num_iters, eval_every)
+
+    def weighted_loss(params, weights):
+        return jnp.sum(weights * per_example_loss_fn(params, X, y))
+
+    grad_fn = jax.grad(weighted_loss)
+
+    def mean_loss(params):
+        return jnp.mean(per_example_loss_fn(params, X, y))
+
+    def one_step(carry: _Carry, _):
+        new_key, sub = jax.random.split(carry.key)
+        # k comes from the *previous* controller state (decided before the step).
+        k = carry.ctrl_state.k if hasattr(carry.ctrl_state, "k") else carry.ctrl_state[0]
+        weights, mask, t_iter = aggregation.fastest_k_iteration(
+            straggler, sub, n_workers, k, s, comm
+        )
+        g = grad_fn(carry.params, weights)
+        params = jax.tree.map(lambda p, gi: p - eta * gi, carry.params, g)
+        sim_time = carry.sim_time + t_iter
+        ctrl_state, _ = controller.update(carry.ctrl_state, g, sim_time)
+        return _Carry(params, ctrl_state, sim_time, new_key), k
+
+    def eval_block(carry: _Carry, length: int):
+        """Advance `length` iterations, then evaluate — all in-graph.
+
+        The per-iteration ops are tiny, so loop-trip overhead is material:
+        unrolling lets XLA fuse across consecutive iterations.
+        """
+        carry, ks = jax.lax.scan(
+            one_step, carry, None, length=length, unroll=min(unroll, length)
+        )
+        return carry, (carry.sim_time, mean_loss(carry.params), ks[-1])
+
+    def run_one(replica_key):
+        carry = _Carry(
+            params=params0,
+            ctrl_state=controller.init(params0),
+            sim_time=jnp.asarray(0.0, jnp.float32),
+            key=replica_key,
+        )
+        records = None
+        if n_full:
+            carry, records = jax.lax.scan(
+                lambda c, _: eval_block(c, eval_every), carry, None, length=n_full
+            )
+        if rem:
+            carry, last = eval_block(carry, rem)
+            last = jax.tree.map(lambda x: x[None], last)
+            records = (
+                last
+                if records is None
+                else jax.tree.map(lambda a, b: jnp.concatenate([a, b]), records, last)
+            )
+        times, losses, ks = records
+        return times, losses, ks
+
+    times, losses, ks = jax.jit(jax.vmap(run_one))(keys)
+    iteration = np.minimum(
+        np.arange(1, times.shape[1] + 1) * eval_every, num_iters
+    ).astype(np.int64)
+    return MonteCarloResult(time=times, loss=losses, k=ks, iteration=iteration)
+
+
+def summarize(result: MonteCarloResult) -> dict:
+    """Replica-axis statistics: mean and 95% CI half-widths, as numpy arrays.
+
+    Returns ``{'iteration', 'n_replicas', 'time_mean', 'time_ci95',
+    'loss_mean', 'loss_ci95', 'k_mean', 'k_ci95'}`` where every ``*_mean`` /
+    ``*_ci95`` entry has shape (n_evals,).  CI half-widths use the normal
+    approximation ``z * s / sqrt(R)`` (zero when R < 2).
+    """
+    out = {"iteration": np.asarray(result.iteration)}
+    r = None
+    for name, arr in (("time", result.time), ("loss", result.loss), ("k", result.k)):
+        a = np.asarray(arr, dtype=np.float64)
+        r = a.shape[0]
+        out[f"{name}_mean"] = a.mean(axis=0)
+        if r > 1:
+            out[f"{name}_ci95"] = _Z95 * a.std(axis=0, ddof=1) / math.sqrt(r)
+        else:
+            out[f"{name}_ci95"] = np.zeros(a.shape[1])
+    out["n_replicas"] = r
+    return out

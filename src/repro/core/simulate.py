@@ -1,32 +1,27 @@
-"""Host-loop simulator for (adaptive) fastest-k SGD at paper scale.
+"""Single-trajectory simulator for (adaptive) fastest-k SGD at paper scale.
 
-This is the harness behind Figs. 2–3: a jitted fastest-k step (sampled
-response times -> mask -> weighted full-batch gradient -> SGD update ->
-controller update) driven by a host loop that tracks the simulated renewal
-clock.  The LM-scale equivalent (sharded, pjit) lives in repro/launch/train.py
-— this module is the paper-faithful small-scale path where stragglers, k and
-the clock can be studied cheaply.
+``simulate_fastest_k`` is the historical entry point behind Figs. 2-3; it is
+now a thin R=1 wrapper over the vectorized Monte-Carlo engine
+(``repro.core.montecarlo.run_monte_carlo``): one fully-jitted program per
+trajectory — ``lax.scan`` over iterations with periodic loss evaluation
+in-graph — rather than a chunked host loop.  History is recorded at *every*
+``eval_every`` iterations exactly (plus a final point at ``num_iters`` when
+it is not a multiple).  The LM-scale equivalent (sharded, pjit) lives in
+repro/launch/train.py — this module is the paper-faithful small-scale path
+where stragglers, k and the clock can be studied cheaply.
 """
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Callable, Dict, List, NamedTuple
+from typing import Callable, Dict, List
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import aggregation
+from repro.core.montecarlo import run_monte_carlo
 from repro.core.straggler import StragglerModel
 
 __all__ = ["simulate_fastest_k"]
-
-
-class _Carry(NamedTuple):
-    params: object
-    ctrl_state: object
-    sim_time: jax.Array
-    key: jax.Array
 
 
 def simulate_fastest_k(
@@ -42,7 +37,7 @@ def simulate_fastest_k(
     key: jax.Array,
     comm: aggregation.CommModel | None = None,
     eval_every: int = 10,
-    chunk: int = 50,
+    chunk: int = 50,  # retained for API compatibility; eval is in-graph now
 ) -> Dict[str, List[float]]:
     """Run adaptive/fixed fastest-k SGD; returns {'time','loss','k'} history.
 
@@ -51,52 +46,23 @@ def simulate_fastest_k(
     full partial gradient over its shard — eq. (2) exactly — realized as the
     gradient of the fastest-k weighted loss.
     """
-    m = X.shape[0]
-    if m % n_workers:
-        raise ValueError(f"m={m} not divisible by n_workers={n_workers}")
-    s = m // n_workers
-
-    def weighted_loss(params, weights):
-        return jnp.sum(weights * per_example_loss_fn(params, X, y))
-
-    grad_fn = jax.grad(weighted_loss)
-
-    def one_step(carry: _Carry, _):
-        key, sub = jax.random.split(carry.key)
-        # k comes from the *previous* controller state (decided before the step).
-        k = carry.ctrl_state.k if hasattr(carry.ctrl_state, "k") else carry.ctrl_state[0]
-        weights, mask, t_iter = aggregation.fastest_k_iteration(
-            straggler, sub, n_workers, k, s, comm
-        )
-        g = grad_fn(carry.params, weights)
-        params = jax.tree.map(lambda p, gi: p - eta * gi, carry.params, g)
-        sim_time = carry.sim_time + t_iter
-        ctrl_state, _ = controller.update(carry.ctrl_state, g, sim_time)
-        return _Carry(params, ctrl_state, sim_time, key), (sim_time, k)
-
-    @jax.jit
-    def run_chunk(carry: _Carry):
-        return jax.lax.scan(one_step, carry, None, length=chunk)
-
-    mean_loss = jax.jit(lambda p: jnp.mean(per_example_loss_fn(p, X, y)))
-
-    carry = _Carry(
-        params=params0,
-        ctrl_state=controller.init(params0),
-        sim_time=jnp.asarray(0.0, jnp.float32),
-        key=key,
+    del chunk
+    result = run_monte_carlo(
+        per_example_loss_fn,
+        params0,
+        X,
+        y,
+        n_workers=n_workers,
+        controller=controller,
+        straggler=straggler,
+        eta=eta,
+        num_iters=num_iters,
+        keys=key[None],
+        comm=comm,
+        eval_every=eval_every,
     )
-    history: Dict[str, List[float]] = {"time": [], "loss": [], "k": []}
-    done = 0
-    while done < num_iters:
-        n = min(chunk, num_iters - done)
-        if n == chunk:
-            carry, (times, ks) = run_chunk(carry)
-        else:
-            carry, (times, ks) = jax.lax.scan(one_step, carry, None, length=n)
-        done += n
-        if done % eval_every == 0 or done >= num_iters:
-            history["time"].append(float(carry.sim_time))
-            history["loss"].append(float(mean_loss(carry.params)))
-            history["k"].append(int(ks[-1]))
-    return history
+    return {
+        "time": [float(t) for t in result.time[0]],
+        "loss": [float(l) for l in result.loss[0]],
+        "k": [int(k) for k in result.k[0]],
+    }

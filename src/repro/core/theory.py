@@ -62,11 +62,18 @@ def error_bound(sys: SGDSystem, k: int, t: np.ndarray, F_start_gap: float | None
     return floor + decay * (gap0 - floor)
 
 
-def switching_times(sys: SGDSystem, k_values: Sequence[int] | None = None) -> List[float]:
-    """Theorem 1: bound-optimal times t_k to switch from k to k+1.
+def switching_times(sys: SGDSystem, k_values: Sequence[int] | None = None,
+                    step: int = 1) -> List[float]:
+    """Theorem 1: bound-optimal times t_k to switch from k to k + step.
+
+    For the paper's unit step:
 
     t_k = t_{k−1} + μ_k/(−ln(1−ηc)) · [ ln(μ_{k+1} − μ_k) − ln(ηLσ²μ_k)
           + ln( 2ck(k+1)s(F(w_{t_{k−1}}) − F*) − ηL(k+1)σ² ) ]
+
+    With step > 1 (a ScheduleController jumping k -> k+step) every k+1 above
+    becomes k+step: the comparison is between staying at k and jumping to the
+    next scheduled level, whose floor and μ are those of k+step.
 
     F(w_{t_{k−1}}) − F* is evaluated recursively from the Lemma-1 bound along
     the adaptive trajectory.  Returns the list [t_1, ..., t_{n−1}] (a switch
@@ -81,8 +88,9 @@ def switching_times(sys: SGDSystem, k_values: Sequence[int] | None = None) -> Li
     t_prev = 0.0
     gap_prev = sys.F0_gap  # F(w_{t_{k-1}}) − F* at the previous switch
     for k in ks:
-        mu_k, mu_k1 = sys.mu(k), sys.mu(k + 1)
-        arg3 = 2.0 * c * k * (k + 1) * s * gap_prev - eta * L * (k + 1) * sig2
+        k_next = min(k + step, sys.n)
+        mu_k, mu_k1 = sys.mu(k), sys.mu(k_next)
+        arg3 = 2.0 * c * k * k_next * s * gap_prev - eta * L * k_next * sig2
         if arg3 <= 0 or (mu_k1 - mu_k) <= 0:
             # Bound already at/below the next floor — switch immediately.
             t_k = t_prev

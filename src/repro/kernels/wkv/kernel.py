@@ -6,7 +6,9 @@ The chunk axis is the sequential (last) grid dimension; the per-(batch, head)
 state S in R^{K x V} lives in VMEM scratch and is carried across chunk steps.
 Within a chunk everything is matmul-shaped for the MXU: a decay-weighted
 (C x C) attention-like score matrix and (C,K)@(K,V) state applications.
-Decays are handled in log space with per-chunk re-centering.
+Decays are handled in log space; the score matrix uses a straddle-boundary
+factorization (one masked matmul per power-of-two level) whose exponents are
+all <= 0, so it cannot overflow f32 at any decay strength.
 
 Grid: (B*H, T // C).
 """
@@ -57,18 +59,44 @@ def _wkv_kernel(
         r * jnp.exp(le), s, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
     )  # (C, V)
 
-    # intra-chunk: scores[t, tau] = sum_k r_t k_tau exp(le_t - li_tau), tau < t
-    # (midpoint re-centering keeps each factor's exponent within the
-    # half-chunk decay range — see linear_scan.wkv6_chunked)
-    lref = li[chunk // 2]  # (K,)
-    r_dec = r * jnp.exp(le - lref[None, :])
-    k_dec = k * jnp.exp(lref[None, :] - li)
-    scores = jax.lax.dot_general(
-        r_dec, k_dec, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    )  # (C, C)
+    # intra-chunk: scores[t, tau] = sum_k r_t k_tau exp(le_t - li_tau), tau < t.
+    # A factorized score exp(le_t - ref) * exp(ref - li_tau) cannot overflow
+    # iff the reference lies *between* tau and t (both exponents are then
+    # partial decay sums, hence <= 0).  A single midpoint reference only
+    # guarantees that for pairs straddling the midpoint; under very strong
+    # decays the same-side pairs overflow f32 (inf * 0 = NaN).  Instead,
+    # every pair uses the unique power-of-two-aligned boundary it straddles
+    # (the odd multiple of the largest possible 2^j in (tau, t]): one masked
+    # (C,C) matmul per level, every factor <= 1, every product *exact*.
+    pos = jax.lax.broadcasted_iota(jnp.int32, (chunk, 1), 0)  # (C, 1)
     tpos = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
     taupos = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
-    scores = jnp.where(taupos < tpos, scores, 0.0)
+    scores = jnp.zeros((chunk, chunk), jnp.float32)
+    h = 1
+    while h < chunk:
+        blk = pos // h
+        is_q = (blk % 2) == 1  # second half of its 2h-block -> query side
+        # boundary m: the odd multiple of h covering/facing this position;
+        # the reference row is li[m - 1].
+        mref = jnp.where(is_q, blk * h, (blk + 1) * h) - 1  # (C, 1)
+        sel = (taupos == mref).astype(jnp.float32)  # one-hot row selector
+        li_ref = jax.lax.dot_general(
+            sel, li, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (C, K)
+        # exponents are <= 0 by construction for active rows; the minimum
+        # guards inactive rows (their pairs are masked out below anyway).
+        e_q = jnp.where(is_q, jnp.minimum(le - li_ref, 0.0), -jnp.inf)
+        e_k = jnp.where(is_q, -jnp.inf, jnp.minimum(li_ref - li, 0.0))
+        part = jax.lax.dot_general(
+            r * jnp.exp(e_q), k * jnp.exp(e_k),
+            (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+        )
+        t_blk, tau_blk = tpos // h, taupos // h
+        pair_mask = (
+            (t_blk // 2 == tau_blk // 2) & (t_blk % 2 == 1) & (tau_blk % 2 == 0)
+        )
+        scores = scores + jnp.where(pair_mask, part, 0.0)
+        h *= 2
     y = y + jax.lax.dot_general(
         scores, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
     )

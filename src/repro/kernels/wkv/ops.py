@@ -31,12 +31,12 @@ def wkv6(
     vdim = v.shape[-1]
     chunk = min(chunk, t)
     if chunk > 64:
-        # RWKV-6's decay is per-CHANNEL, so the intra-chunk scores cannot use
-        # the (C,C) pairwise-exact log-space form (that would need a (C,C,K)
-        # tensor); the factorized form's exponents grow with the half-chunk
-        # cumulative decay and overflow f32 beyond chunk 64.  (Mamba2 moved to
-        # scalar per-head decay precisely to lift this limit — see
-        # linear_scan.ssm_chunked, which is exact at any chunk.)
+        # The straddle-factorized intra-chunk scores (kernel.py) are exact at
+        # any decay strength, but each extra chunk doubling adds a masked
+        # (C,C) matmul level and grows the VMEM-resident score matrix; 64
+        # keeps the kernel comfortably within scratch budget.  (Mamba2 moved
+        # to scalar per-head decay to use the (C,C) pairwise-exact log-space
+        # form directly — see linear_scan.ssm_chunked, exact at any chunk.)
         raise ValueError(f"wkv6 chunk must be <= 64 for f32 stability, got {chunk}")
 
     def fold(x):  # (B,T,H,D) -> (B*H, T, D)

@@ -145,6 +145,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, *,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # jax < 0.4.38 wraps the dict in a list
+        cost = cost[0] if cost else {}
     result: Dict[str, Any] = {
         "arch": arch,
         "shape": shape_name,

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro import checkpoint
 from repro.configs import get_config, get_smoke_config, list_archs
+from repro.core import theory
 from repro.core.aggregation import CommModel
 from repro.core.controller import get_controller
 from repro.core.straggler import get_straggler_model
@@ -43,12 +44,25 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--optimizer", default="adamw")
     ap.add_argument("--controller", default="pflug",
-                    choices=["pflug", "fixed", "variance_ratio"])
+                    choices=["pflug", "sketched_pflug", "fixed", "schedule",
+                             "variance_ratio"])
     ap.add_argument("--k0", type=int, default=1)
     ap.add_argument("--k-step", type=int, default=1)
     ap.add_argument("--thresh", type=int, default=10)
     ap.add_argument("--burnin", type=int, default=20)
     ap.add_argument("--fixed-k", type=int, default=2)
+    ap.add_argument("--sketch-dim", type=int, default=64,
+                    help="sketched_pflug: dimension of the gradient sketch")
+    # --controller schedule: Theorem-1 switch times need the SGD system
+    # constants, which are not identifiable from an LM run — supply estimates.
+    ap.add_argument("--schedule-smoothness", type=float, default=1.0,
+                    help="schedule: L (Lipschitz-smoothness estimate)")
+    ap.add_argument("--schedule-strong-convexity", type=float, default=0.1,
+                    help="schedule: c (strong-convexity estimate)")
+    ap.add_argument("--schedule-sigma2", type=float, default=1.0,
+                    help="schedule: per-sample gradient variance estimate")
+    ap.add_argument("--schedule-f0-gap", type=float, default=10.0,
+                    help="schedule: F(w0) - F* estimate")
     ap.add_argument("--straggler", default="exponential",
                     choices=["exponential", "shifted_exponential", "pareto",
                              "bimodal", "deterministic"])
@@ -71,15 +85,31 @@ def main(argv=None):
         raise SystemExit(f"--batch {args.batch} must be divisible by --n-workers {n_workers}")
 
     opt = get_optimizer(args.optimizer, args.lr)
+    straggler = get_straggler_model(args.straggler)
     ckw = {}
     if args.controller == "pflug":
         ckw = dict(k0=args.k0, step=args.k_step, thresh=args.thresh, burnin=args.burnin)
+    elif args.controller == "sketched_pflug":
+        ckw = dict(k0=args.k0, step=args.k_step, thresh=args.thresh,
+                   burnin=args.burnin, sketch_dim=args.sketch_dim)
     elif args.controller == "fixed":
         ckw = dict(k=args.fixed_k)
+    elif args.controller == "schedule":
+        # Theorem-1 bound-optimal switch times, computed from the chosen
+        # straggler model's order statistics and the supplied SGD constants.
+        sysm = theory.SGDSystem(
+            eta=args.lr, L=args.schedule_smoothness,
+            c=args.schedule_strong_convexity, sigma2=args.schedule_sigma2,
+            s=args.batch // n_workers, F0_gap=args.schedule_f0_gap,
+            n=n_workers, straggler=straggler,
+        )
+        times = theory.switching_times(
+            sysm, list(range(args.k0, n_workers, args.k_step)), step=args.k_step)
+        print(f"schedule: Theorem-1 switch times {[round(t, 2) for t in times]}")
+        ckw = dict(switch_times=times, k0=args.k0, step=args.k_step)
     elif args.controller == "variance_ratio":
         ckw = dict(k0=args.k0, step=args.k_step, burnin=args.burnin)
     controller = get_controller(args.controller, n_workers, **ckw)
-    straggler = get_straggler_model(args.straggler)
     comm = CommModel(alpha=args.comm_alpha, beta=args.comm_beta)
 
     train_step = steps_lib.make_train_step(model, opt, controller, straggler,

@@ -1,11 +1,13 @@
-"""Unit + property tests for straggler models, order statistics, aggregation."""
+"""Unit tests for straggler models, order statistics, aggregation.
+
+(The hypothesis property tests live in test_properties.py, which skips
+cleanly when hypothesis is not installed.)
+"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.core import aggregation as agg
 from repro.core.straggler import (
@@ -76,21 +78,15 @@ def test_registry():
 # ---------------- aggregation ----------------
 
 
-@given(
-    n=st.integers(2, 32),
-    k=st.integers(1, 32),
-    seed=st.integers(0, 2**31 - 1),
-)
-@settings(max_examples=40, deadline=None)
-def test_fastest_k_mask_has_exactly_k_ones(n, k, seed):
-    k = min(k, n)
-    times = jax.random.uniform(jax.random.PRNGKey(seed), (n,))
-    mask = agg.fastest_k_mask(times, jnp.asarray(k))
-    assert int(mask.sum()) == k
-    # masked workers are exactly the k smallest times
-    chosen = np.sort(np.asarray(times)[np.asarray(mask) > 0])
-    all_sorted = np.sort(np.asarray(times))
-    np.testing.assert_allclose(chosen, all_sorted[:k])
+def test_fastest_k_mask_matches_argsort():
+    for seed, n, k in [(0, 2, 1), (1, 7, 3), (2, 32, 32), (3, 50, 10)]:
+        times = jax.random.uniform(jax.random.PRNGKey(seed), (n,))
+        mask = agg.fastest_k_mask(times, jnp.asarray(k))
+        assert int(mask.sum()) == k
+        # masked workers are exactly the k smallest times
+        chosen = np.sort(np.asarray(times)[np.asarray(mask) > 0])
+        all_sorted = np.sort(np.asarray(times))
+        np.testing.assert_allclose(chosen, all_sorted[:k])
 
 
 def test_mask_handles_ties():

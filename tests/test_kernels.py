@@ -1,12 +1,14 @@
 """Pallas kernel validation (interpret=True on CPU) against pure-jnp oracles,
-swept over shapes / dtypes / masking variants, plus hypothesis property tests."""
+swept over shapes / dtypes / masking variants.
+
+(The hypothesis property tests live in test_properties.py, which skips
+cleanly when hypothesis is not installed.)
+"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.kernels.attention.ops import flash_attention
 from repro.kernels.attention.ref import attention_ref
@@ -52,26 +54,6 @@ def test_flash_attention_block_shape_invariance(bq, bk):
     out = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk)
     ref = attention_ref(q, k, v, causal=True)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
-
-
-@given(
-    t=st.sampled_from([64, 128]),
-    h=st.sampled_from([1, 2, 4]),
-    g=st.sampled_from([1, 2]),
-    hd=st.sampled_from([32, 64]),
-    seed=st.integers(0, 1000),
-)
-@settings(max_examples=8, deadline=None)
-def test_flash_attention_property(t, h, g, hd, seed):
-    kv = max(h // g, 1)
-    h = kv * g
-    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
-    q = jax.random.normal(ks[0], (1, t, h, hd))
-    k = jax.random.normal(ks[1], (1, t, kv, hd))
-    v = jax.random.normal(ks[2], (1, t, kv, hd))
-    out = flash_attention(q, k, v, causal=True, block_q=32, block_k=32)
-    ref = attention_ref(q, k, v, causal=True)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5, rtol=3e-5)
 
 
 def test_flash_attention_first_token_attends_only_to_itself():
@@ -161,17 +143,3 @@ def test_wkv_strong_decay_stability():
     y, s = wkv6(r, kk, vv, w, u, s0, chunk=64)
     assert bool(jnp.all(jnp.isfinite(y)))
     np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=2e-3, rtol=5e-3)
-
-
-@given(seed=st.integers(0, 10_000), chunk=st.sampled_from([16, 32]))
-@settings(max_examples=6, deadline=None)
-def test_wkv_property_state_consistency(seed, chunk):
-    """Splitting the sequence and carrying state == one pass (renewal property)."""
-    r, kk, vv, w, u, s0 = _wkv_inputs(1, 64, 2, 8, 8, seed=seed)
-    y_all, s_all = wkv6(r, kk, vv, w, u, s0, chunk=chunk)
-    y1, s1 = wkv6(r[:, :32], kk[:, :32], vv[:, :32], w[:, :32], u, s0, chunk=chunk)
-    y2, s2 = wkv6(r[:, 32:], kk[:, 32:], vv[:, 32:], w[:, 32:], u, s1, chunk=chunk)
-    np.testing.assert_allclose(
-        np.asarray(jnp.concatenate([y1, y2], 1)), np.asarray(y_all), atol=1e-3, rtol=2e-3
-    )
-    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_all), atol=1e-3, rtol=2e-3)

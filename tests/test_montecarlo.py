@@ -1,0 +1,202 @@
+"""Tests for the vectorized Monte-Carlo engine and this PR's bugfix
+regressions (sketch determinism across processes, controller registry,
+eval_every-exact history)."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.controller import (
+    FixedKController,
+    PflugController,
+    ScheduleController,
+    SketchedPflugController,
+    VarianceRatioController,
+    get_controller,
+)
+from repro.core.montecarlo import run_monte_carlo, summarize
+from repro.core.simulate import simulate_fastest_k
+from repro.core.straggler import Exponential
+from repro.data import make_linreg_data
+
+N, M, D = 10, 200, 5
+
+
+@pytest.fixture(scope="module")
+def linreg():
+    data = make_linreg_data(jax.random.PRNGKey(0), m=M, d=D)
+    L = 2 * float(jnp.linalg.eigvalsh(data.X.T @ data.X / M).max())
+    return data, 0.5 / L
+
+
+def _loss(w, X, y):
+    return (X @ w - y) ** 2
+
+
+def _mc(data, eta, controller, **kw):
+    kw.setdefault("num_iters", 300)
+    kw.setdefault("eval_every", 50)
+    return run_monte_carlo(
+        _loss, jnp.zeros((D,)), data.X, data.y, n_workers=N,
+        controller=controller, straggler=Exponential(rate=1.0), eta=eta, **kw,
+    )
+
+
+# ------------------------------------------------- engine vs legacy R=1 path
+
+
+@pytest.mark.parametrize("make_ctrl", [
+    lambda: FixedKController(n_workers=N, k=3),
+    lambda: PflugController(n_workers=N, k0=2, step=2, thresh=5, burnin=10),
+], ids=["fixed", "pflug"])
+def test_engine_matches_single_trajectory_per_seed(linreg, make_ctrl):
+    data, eta = linreg
+    keys = jax.random.split(jax.random.PRNGKey(7), 4)
+    res = _mc(data, eta, make_ctrl(), keys=keys)
+    for i in range(4):
+        hist = simulate_fastest_k(
+            _loss, jnp.zeros((D,)), data.X, data.y, n_workers=N,
+            controller=make_ctrl(), straggler=Exponential(rate=1.0), eta=eta,
+            num_iters=300, key=keys[i], eval_every=50,
+        )
+        np.testing.assert_allclose(np.asarray(res.loss[i]), hist["loss"], rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(res.time[i]), hist["time"], rtol=1e-5)
+        assert [int(k) for k in res.k[i]] == hist["k"]
+
+
+def test_replicas_are_independent(linreg):
+    data, eta = linreg
+    res = _mc(data, eta, FixedKController(n_workers=N, k=3),
+              key=jax.random.PRNGKey(0), n_replicas=3)
+    # different seeds -> different renewal clocks
+    assert float(jnp.abs(res.time[0] - res.time[1]).max()) > 0
+
+
+# ------------------------------------------------------------- CI scaling
+
+
+def test_ci_shrinks_like_inverse_sqrt_replicas(linreg):
+    data, eta = linreg
+    ctrl = FixedKController(n_workers=N, k=3)
+    ci = {}
+    for r in (4, 64):
+        res = _mc(data, eta, ctrl, key=jax.random.PRNGKey(3), n_replicas=r,
+                  num_iters=400, eval_every=50)
+        ci[r] = float(np.mean(summarize(res)["loss_ci95"][2:]))
+    # expected ratio sqrt(4/64) = 0.25; wide band for the noisy R=4 std estimate
+    ratio = ci[64] / ci[4]
+    assert 0.05 < ratio < 0.6, f"CI ratio {ratio} not ~0.25"
+
+
+def test_summarize_single_replica_has_zero_ci(linreg):
+    data, eta = linreg
+    res = _mc(data, eta, FixedKController(n_workers=N, k=2),
+              key=jax.random.PRNGKey(0), n_replicas=1)
+    s = summarize(res)
+    assert s["n_replicas"] == 1
+    assert np.all(s["loss_ci95"] == 0) and np.all(s["time_ci95"] == 0)
+    np.testing.assert_allclose(s["loss_mean"], np.asarray(res.loss[0]))
+
+
+# ------------------------------------------- every controller runs under vmap
+
+
+@pytest.mark.parametrize("make_ctrl", [
+    lambda: FixedKController(n_workers=N, k=2),
+    lambda: PflugController(n_workers=N, k0=1, step=1, thresh=3, burnin=5),
+    lambda: SketchedPflugController(n_workers=N, k0=1, step=1, thresh=3,
+                                    burnin=5, sketch_dim=8),
+    lambda: ScheduleController(n_workers=N, switch_times=[5.0, 12.0], k0=1, step=2),
+    lambda: VarianceRatioController(n_workers=N, k0=1, step=2, burnin=10),
+], ids=["fixed", "pflug", "sketched_pflug", "schedule", "variance_ratio"])
+def test_controllers_run_under_vmap(linreg, make_ctrl):
+    data, eta = linreg
+    res = _mc(data, eta, make_ctrl(), key=jax.random.PRNGKey(1), n_replicas=3,
+              num_iters=120, eval_every=40)
+    assert res.loss.shape == (3, 3)
+    assert bool(jnp.all(jnp.isfinite(res.loss)))
+    assert bool(jnp.all((res.k >= 1) & (res.k <= N)))
+    assert bool(jnp.all(res.time > 0))
+
+
+def test_schedule_controller_switches_at_times(linreg):
+    data, eta = linreg
+    res = _mc(data, eta,
+              ScheduleController(n_workers=N, switch_times=[0.0], k0=2, step=3),
+              key=jax.random.PRNGKey(1), n_replicas=2, num_iters=60, eval_every=20)
+    # t=0 switch time has passed by the first iteration -> k = k0 + step
+    assert int(res.k[0, -1]) == 5
+
+
+# ------------------------------------------------- bugfix: eval_every honored
+
+
+def test_history_honors_eval_every_exactly(linreg):
+    data, eta = linreg
+    ctrl = FixedKController(n_workers=N, k=2)
+    common = dict(n_workers=N, controller=ctrl, straggler=Exponential(rate=1.0),
+                  eta=eta, key=jax.random.PRNGKey(0))
+    # the seed bug: eval_every=10 with the old chunk=50 host loop yielded 5x
+    # fewer points; 100 iters @ eval_every=10 must give exactly 10 points
+    h = simulate_fastest_k(_loss, jnp.zeros((D,)), data.X, data.y,
+                           num_iters=100, eval_every=10, **common)
+    assert len(h["time"]) == len(h["loss"]) == len(h["k"]) == 10
+    # non-divisible budget: final partial point lands exactly at num_iters
+    h = simulate_fastest_k(_loss, jnp.zeros((D,)), data.X, data.y,
+                           num_iters=95, eval_every=10, **common)
+    assert len(h["loss"]) == 10
+    res = _mc(data, eta, ctrl, keys=jax.random.split(jax.random.PRNGKey(0), 2),
+              num_iters=95, eval_every=10)
+    assert list(res.iteration) == [10, 20, 30, 40, 50, 60, 70, 80, 90, 95]
+    # eval_every larger than the budget: a single eval at num_iters
+    h = simulate_fastest_k(_loss, jnp.zeros((D,)), data.X, data.y,
+                           num_iters=5, eval_every=10, **common)
+    assert len(h["loss"]) == 1
+
+
+# --------------------------------------- bugfix: sketch seed reproducibility
+
+
+def test_sketch_deterministic_across_processes():
+    """The Rademacher sketch seeds must not depend on PYTHONHASHSEED."""
+    script = (
+        "import jax.numpy as jnp\n"
+        "from repro.core.controller import SketchedPflugController\n"
+        "c = SketchedPflugController(n_workers=4, sketch_dim=8)\n"
+        "g = {'layer1': jnp.arange(12.0).reshape(3, 4), 'bias': jnp.ones((5,))}\n"
+        "print(','.join(f'{v:.8e}' for v in c._sketch(g)))\n"
+    )
+    src = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    outs = []
+    for hashseed in ("0", "424242"):
+        env = dict(os.environ, PYTHONHASHSEED=hashseed)
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        proc = subprocess.run([sys.executable, "-c", script], env=env,
+                              capture_output=True, text=True, check=True)
+        outs.append(proc.stdout.strip().splitlines()[-1])
+    assert outs[0] == outs[1], "sketch varies with PYTHONHASHSEED"
+
+
+# ------------------------------------------- bugfix: controller registry
+
+
+def test_registry_round_trip():
+    c = get_controller("sketched_pflug", 8, sketch_dim=16)
+    assert isinstance(c, SketchedPflugController) and c.sketch_dim == 16
+    c = get_controller("schedule", 8, switch_times=[1.0, 2.0])
+    assert isinstance(c, ScheduleController)
+    with pytest.raises(ValueError, match="sketched_pflug"):
+        get_controller("nope", 8)
+
+
+def test_package_exports_sketched_controller():
+    import repro.core as core
+
+    assert core.SketchedPflugController is SketchedPflugController
+    assert "SketchedPflugController" in core.controller.__all__
+    assert callable(core.run_monte_carlo) and callable(core.summarize)
