@@ -1,11 +1,11 @@
 """Paper Fig. 3: adaptive fastest-k SGD vs fully asynchronous SGD on the same
 linear-regression task (§V-C: adaptive starts at k=1, step=5, capped at 36).
 
-The adaptive arm is a Monte-Carlo study: R replicas run as one jitted
-program via the vectorized engine, reported as mean +/- 95% CI.  The async
-baseline is inherently event-driven (a host-side priority queue of stale
-worker completions), so it stays a per-seed host loop over a handful of
-seeds.
+The adaptive arm is a Monte-Carlo study: R replicas run as one compiled
+dispatch via the sweep engine (a 1-cell grid), reported as mean +/- 95% CI.
+The async baseline is inherently event-driven (a host-side priority queue of
+stale worker completions), so it stays a per-seed host loop over a handful
+of seeds.
 """
 
 from __future__ import annotations
@@ -18,8 +18,8 @@ import numpy as np
 
 from repro.core.async_sim import simulate_async_sgd
 from repro.core.controller import PflugController
-from repro.core.montecarlo import run_monte_carlo, summarize
 from repro.core.straggler import Exponential
+from repro.core.sweep import SweepCase, run_sweep, summarize_cells
 from repro.data import make_linreg_data
 
 D, M, N = 100, 2000, 50
@@ -42,13 +42,16 @@ def run(csv_path: str | None = None, iters: int = ITERS, n_replicas: int = REPLI
     s = M // N
 
     t0 = time.perf_counter()
-    adaptive = summarize(run_monte_carlo(
-        _loss, w0, data.X, data.y, n_workers=N,
-        controller=PflugController(n_workers=N, k0=1, step=5, thresh=10,
-                                   burnin=int(0.1 * M), k_max=36),
-        straggler=straggler, eta=eta, num_iters=iters,
-        key=jax.random.PRNGKey(1), n_replicas=n_replicas, eval_every=500,
-    ))
+    adaptive_case = SweepCase(
+        PflugController(n_workers=N, k0=1, step=5, thresh=10,
+                        burnin=int(0.1 * M), k_max=36),
+        straggler, eta=eta, label="adaptive",
+    )
+    adaptive = summarize_cells(run_sweep(
+        _loss, w0, data.X, data.y, n_workers=N, cases=[adaptive_case],
+        num_iters=iters, key=jax.random.PRNGKey(1), n_replicas=n_replicas,
+        eval_every=500,
+    ))["adaptive"]
     total_time = float(adaptive["time_mean"][-1])
 
     # async baseline [2]: each arriving stale shard-gradient is applied

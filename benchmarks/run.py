@@ -9,7 +9,15 @@ import traceback
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-from benchmarks import ablation, fig1, fig2, fig3, kernels_bench, roofline_table  # noqa: E402
+from benchmarks import (  # noqa: E402
+    ablation,
+    fig1,
+    fig2,
+    fig3,
+    kernels_bench,
+    roofline_table,
+    sweep_bench,
+)
 
 
 def main() -> None:
@@ -20,6 +28,7 @@ def main() -> None:
         ("fig2", lambda: [fig2.run("results/fig2.csv")]),
         ("fig3", lambda: [fig3.run("results/fig3.csv")]),
         ("ablation", lambda: [ablation.run("results/ablation.csv")]),
+        ("sweep", lambda: [sweep_bench.run("results/BENCH_sweep.json")]),
         ("kernels", kernels_bench.run),
         ("roofline", lambda: [roofline_table.run()]),
     ]

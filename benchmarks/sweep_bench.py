@@ -1,0 +1,172 @@
+"""Old-vs-new sweep benchmark: looped per-cell `run_monte_carlo` dispatches
+versus ONE grid-vmapped `run_sweep` dispatch, on a fixed controller x
+straggler grid at 4k iterations.  Writes ``results/BENCH_sweep.json`` — the
+repo's perf-trajectory baseline (see benchmarks/README.md for the schema).
+
+The *old* engine rebuilt ``jax.jit(jax.vmap(run_one))`` on every call, so a
+G-cell grid paid G traces + G compiles + G dispatches; that is the ``cold``
+looped number (measured by clearing the module-level program cache first).
+The ``warm`` looped number is the post-PR cached loop (compiles amortized,
+still G dispatches); the sweep engine replaces both with a single
+grid-composition-agnostic program.  Both cold and warm are recorded;
+``speedup`` refers to old-vs-new, i.e. cold-vs-cold.
+
+    PYTHONPATH=src python benchmarks/sweep_bench.py [--smoke] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.controller import (
+    FixedKController,
+    PflugController,
+    ScheduleController,
+    VarianceRatioController,
+)
+from repro.core.montecarlo import clear_program_cache, run_monte_carlo
+from repro.core.straggler import Bimodal, Exponential, Pareto
+from repro.core.sweep import SweepCase, clear_sweep_cache, run_sweep
+from repro.core.theory import SGDSystem, switching_times
+from repro.data import make_linreg_data
+
+# Quickstart-scale cells (examples/quickstart.py): the sweep engine's target
+# workload is *many scenarios of moderate size*, where per-cell trace +
+# compile + dispatch overhead — not gemm flops — dominates the looped path.
+D, M, N = 20, 400, 20
+ITERS = 4000
+REPLICAS = 32
+EVAL_EVERY = 500
+
+
+def _loss(params, X, y):
+    r = X @ params - y
+    return r * r
+
+
+def _build_grid(data, eta, smoke: bool):
+    k0, step, k_cap = 4, 4, 16
+    stragglers = {
+        "exp": Exponential(rate=1.0),
+        "pareto": Pareto(x_m=0.5, alpha=1.5),
+    }
+    if not smoke:
+        stragglers["bimodal"] = Bimodal(fast_mean=0.5, slow_mean=10.0, p_slow=0.1)
+    controllers = {
+        "pflug": PflugController(n_workers=N, k0=k0, step=step, thresh=10,
+                                 burnin=40, k_max=k_cap),
+        "fixed_k4": FixedKController(n_workers=N, k=k0),
+    }
+    if not smoke:
+        controllers["fixed_k16"] = FixedKController(n_workers=N, k=k_cap)
+        controllers["variance_ratio"] = VarianceRatioController(
+            n_workers=N, k0=k0, step=step, burnin=40, k_max=k_cap)
+        sysm = SGDSystem(eta=eta, L=1.0, c=0.1, sigma2=1.0, s=M // N,
+                         F0_gap=10.0, n=N, straggler=stragglers["exp"])
+        controllers["schedule"] = ScheduleController(
+            n_workers=N, k0=k0, step=step,
+            switch_times=switching_times(sysm, list(range(k0, k_cap, step)), step=step))
+    return [
+        SweepCase(ctrl, strag, eta=eta, label=f"{cname}|{sname}")
+        for sname, strag in stragglers.items()
+        for cname, ctrl in controllers.items()
+    ]
+
+
+def run(out_path: str = "results/BENCH_sweep.json", smoke: bool = False):
+    iters = 200 if smoke else ITERS
+    replicas = 8 if smoke else REPLICAS
+    data = make_linreg_data(jax.random.PRNGKey(0), m=M, d=D)
+    L = 2 * float(jnp.linalg.eigvalsh(data.X.T @ data.X / M).max())
+    eta = 0.5 / L
+    w0 = jnp.zeros((D,))
+    keys = jax.random.split(jax.random.PRNGKey(1), replicas)
+    cases = _build_grid(data, eta, smoke)
+
+    def looped():
+        outs = []
+        for c in cases:
+            outs.append(run_monte_carlo(
+                _loss, w0, data.X, data.y, n_workers=N, controller=c.controller,
+                straggler=c.straggler, eta=c.eta, num_iters=iters, keys=keys,
+                eval_every=EVAL_EVERY))
+        jax.block_until_ready([o.loss for o in outs])
+        return outs
+
+    def sweep():
+        res = run_sweep(_loss, w0, data.X, data.y, n_workers=N, cases=cases,
+                        num_iters=iters, keys=keys, eval_every=EVAL_EVERY)
+        jax.block_until_ready(res.loss)
+        return res
+
+    clear_program_cache()
+    t0 = time.perf_counter(); refs = looped(); looped_cold = time.perf_counter() - t0
+    t0 = time.perf_counter(); looped(); looped_warm = time.perf_counter() - t0
+    clear_sweep_cache()
+    t0 = time.perf_counter(); res = sweep(); sweep_cold = time.perf_counter() - t0
+    t0 = time.perf_counter(); sweep(); sweep_warm = time.perf_counter() - t0
+
+    import numpy as np
+    bitwise = all(
+        np.array_equal(np.asarray(res.time[g]), np.asarray(r.time))
+        and np.array_equal(np.asarray(res.loss[g]), np.asarray(r.loss))
+        and np.array_equal(np.asarray(res.k[g]), np.asarray(r.k))
+        for g, r in enumerate(refs)
+    )
+
+    record = {
+        "name": "sweep_bench",
+        "smoke": smoke,
+        "grid": {
+            "labels": [c.name() for c in cases],
+            "n_cells": len(cases),
+            "n_workers": N,
+            "m": M,
+            "d": D,
+        },
+        "n_replicas": replicas,
+        "num_iters": iters,
+        "eval_every": EVAL_EVERY,
+        "looped_s": {"cold": round(looped_cold, 3), "warm": round(looped_warm, 3)},
+        "sweep_s": {"cold": round(sweep_cold, 3), "warm": round(sweep_warm, 3)},
+        # old-vs-new: the pre-cache engine re-traced every call, so the old
+        # grid loop is the cold looped path; the sweep's one-time compile is
+        # charged to it symmetrically.
+        "speedup": round(looped_cold / sweep_cold, 3),
+        "speedup_warm": round(looped_warm / sweep_warm, 3),
+        "bitwise_equal": bitwise,
+        "backend": jax.default_backend(),
+        "n_devices": jax.local_device_count(),
+        "jax_version": jax.__version__,
+    }
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    return {
+        "name": "sweep_bench",
+        "us_per_call": sweep_cold * 1e6,
+        "derived": f"cells={len(cases)};replicas={replicas};iters={iters};"
+                   f"speedup={record['speedup']:.2f}x;"
+                   f"speedup_warm={record['speedup_warm']:.2f}x;"
+                   f"bitwise_equal={bitwise}",
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid + short runs (CI-friendly)")
+    ap.add_argument("--out", default="results/BENCH_sweep.json")
+    args = ap.parse_args()
+    print(json.dumps(run(args.out, smoke=args.smoke), indent=2))
+
+
+if __name__ == "__main__":
+    main()

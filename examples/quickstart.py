@@ -2,9 +2,9 @@
 
 A master with n=20 simulated workers runs linear regression; Algorithm 1's
 Pflug test detects the transient->stationary phase transition and raises k.
-Each config runs R=16 Monte-Carlo replicas as ONE jitted program (scan over
-iterations, vmap over seeds), so the printed trajectories are mean +/- 95% CI
-rather than a single seed.
+BOTH configs (adaptive + the fixed-k baseline), R=16 Monte-Carlo replicas
+each, run as ONE compiled dispatch via the grid-vmapped sweep engine, so the
+printed trajectories are mean +/- 95% CI rather than a single seed.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,12 +13,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.controller import FixedKController, PflugController
-from repro.core.montecarlo import run_monte_carlo, summarize
 from repro.core.straggler import Exponential
+from repro.core.sweep import SweepCase, run_sweep, summarize_cells
 
 from repro.data import make_linreg_data
 
-R = 16  # Monte-Carlo replicas (all run in one compiled program)
+R = 16  # Monte-Carlo replicas (the whole grid runs in one compiled program)
 
 
 def main():
@@ -29,24 +29,28 @@ def main():
     w0 = jnp.zeros((20,))
     keys = jax.random.split(jax.random.PRNGKey(1), R)
 
-    def mc(controller):
-        return summarize(run_monte_carlo(
-            (lambda w, X, y: (X @ w - y) ** 2), w0, data.X, data.y,
-            n_workers=n_workers, controller=controller,
-            straggler=Exponential(rate=1.0),
-            eta=eta, num_iters=8000, keys=keys, eval_every=1000,
-        ))
+    cases = [
+        SweepCase(PflugController(n_workers=n_workers, k0=2, step=4,
+                                  thresh=10, burnin=40),
+                  Exponential(rate=1.0), eta=eta, label="adaptive"),
+        SweepCase(FixedKController(n_workers=n_workers, k=2),
+                  Exponential(rate=1.0), eta=eta, label="fixed_k2"),
+    ]
+    stats = summarize_cells(run_sweep(
+        (lambda w, X, y: (X @ w - y) ** 2), w0, data.X, data.y,
+        n_workers=n_workers, cases=cases, num_iters=8000, keys=keys,
+        eval_every=1000,
+    ))
 
     print(f"== adaptive fastest-k (Algorithm 1), mean +- 95% CI over R={R} ==")
-    hist = mc(PflugController(n_workers=n_workers, k0=2, step=4,
-                              thresh=10, burnin=40))
+    hist = stats["adaptive"]
     for i in range(len(hist["iteration"])):
         print(f"  sim_time={hist['time_mean'][i]:8.1f}  "
               f"loss={hist['loss_mean'][i] - data.f_star:10.4g}"
               f" +-{hist['loss_ci95'][i]:8.2g}  k={hist['k_mean'][i]:5.2f}")
 
     print("== non-adaptive fixed k=2 (paper baseline) ==")
-    hist_f = mc(FixedKController(n_workers=n_workers, k=2))
+    hist_f = stats["fixed_k2"]
     for i in range(len(hist_f["iteration"])):
         print(f"  sim_time={hist_f['time_mean'][i]:8.1f}  "
               f"loss={hist_f['loss_mean'][i] - data.f_star:10.4g}"

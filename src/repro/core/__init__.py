@@ -9,6 +9,10 @@ Modules:
   montecarlo   — vectorized Monte-Carlo engine: R replicas of the fastest-k
                  simulation as one jitted program (scan over iterations,
                  vmap over replica seeds, in-graph periodic loss eval)
+  sweep        — single-dispatch sweep engine: an entire controller x
+                 straggler x config grid vmapped on top of the replica axis
+                 and sharded across local devices (fig2/fig3/ablation are
+                 each ONE compiled program)
   simulate     — single-trajectory R=1 wrapper over the engine (Figs 2-3)
   async_sim    — event-driven asynchronous-SGD baseline
 
@@ -40,3 +44,10 @@ from repro.core.controller import (  # noqa: F401
 )
 from repro.core.montecarlo import MonteCarloResult, run_monte_carlo, summarize  # noqa: F401
 from repro.core.straggler import get_straggler_model  # noqa: F401
+from repro.core.sweep import (  # noqa: F401
+    SweepCase,
+    SweepResult,
+    product_cases,
+    run_sweep,
+    summarize_cells,
+)

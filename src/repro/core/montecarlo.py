@@ -13,9 +13,22 @@ compiled XLA program:
     single policy-agnostic carry (the controller contributes an opaque
     pytree state via its ``init``/``update`` interface).
 
+Compiled programs are cached at module level, keyed on everything that is
+baked into the trace (loss fn, n_workers, controller/straggler/comm values,
+eta, iteration counts, unroll): repeated calls with the same configuration —
+a looped grid, a benchmark's warm-up + timed run — reuse the first trace
+instead of rebuilding ``jit(vmap(run_one))`` per call.  Data (params0, X, y,
+keys) are traced *arguments*, so jit's own shape cache handles varying
+shapes per configuration.
+
+The per-iteration hot path samples and ranks worker times once
+(``aggregation.fastest_k_draw``) and computes the eq.-(2) weighted gradient
+through a per-worker segment sum (``aggregation.fastest_k_weighted_loss``)
+— no length-m per-example weight vector is ever materialized.
+
 ``repro.core.simulate.simulate_fastest_k`` is a thin R=1 wrapper over this
-engine; benchmarks drive it directly with R >= 32 to emit mean +/- 95% CI
-bands from a single jitted dispatch.
+engine; benchmarks drive it directly with R >= 32, and whole controller x
+straggler grids run as a *single* dispatch via ``repro.core.sweep``.
 
 API sketch::
 
@@ -30,6 +43,7 @@ API sketch::
 
 from __future__ import annotations
 
+import dataclasses
 import math
 from typing import Callable, NamedTuple
 
@@ -40,7 +54,13 @@ import numpy as np
 from repro.core import aggregation
 from repro.core.straggler import StragglerModel
 
-__all__ = ["MonteCarloResult", "run_monte_carlo", "summarize"]
+__all__ = [
+    "MonteCarloResult",
+    "run_monte_carlo",
+    "summarize",
+    "program_cache_stats",
+    "clear_program_cache",
+]
 
 _Z95 = 1.959963984540054  # two-sided 95% normal quantile
 
@@ -65,6 +85,129 @@ class MonteCarloResult(NamedTuple):
     loss: jax.Array
     k: jax.Array
     iteration: np.ndarray
+
+
+def _hashable(obj):
+    """Frozen-dataclass config objects -> hashable cache-key components.
+
+    Handles list-valued fields (e.g. ScheduleController.switch_times) by
+    tuple-ifying; falls back to repr for anything exotic."""
+    if obj is None:
+        return None
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return (
+            type(obj).__module__,
+            type(obj).__qualname__,
+            tuple(
+                (f.name, _hashable(getattr(obj, f.name)))
+                for f in dataclasses.fields(obj)
+            ),
+        )
+    if isinstance(obj, (list, tuple)):
+        return tuple(_hashable(x) for x in obj)
+    if isinstance(obj, np.ndarray):
+        # repr() elides large arrays ('...'), which could collide two
+        # different configs onto one cache key — hash the actual contents.
+        return ("ndarray", obj.shape, str(obj.dtype), obj.tobytes())
+    try:
+        hash(obj)
+        return obj
+    except TypeError:
+        return repr(obj)
+
+
+# config-key -> jitted (params0, X, y, keys) -> (times, losses, ks).
+_PROGRAM_CACHE: dict = {}
+# Incremented inside the traced function body, i.e. once per actual trace.
+# Tests assert a second identical call leaves this unchanged.
+_N_TRACES = 0
+
+
+def program_cache_stats() -> dict:
+    """Module-level compiled-program cache introspection (for tests/benchmarks)."""
+    return {"programs": len(_PROGRAM_CACHE), "traces": _N_TRACES}
+
+
+def clear_program_cache() -> None:
+    global _N_TRACES
+    _PROGRAM_CACHE.clear()
+    _N_TRACES = 0
+
+
+def _build_program(
+    per_example_loss_fn: Callable,
+    n_workers: int,
+    controller,
+    straggler: StragglerModel,
+    comm,
+    eta: float,
+    num_iters: int,
+    eval_every: int,
+    unroll: int,
+):
+    n_full, rem = divmod(num_iters, eval_every)
+
+    def run_all(params0, X, y, keys):
+        global _N_TRACES
+        _N_TRACES += 1  # Python side effect: fires once per trace, never per run
+        s = X.shape[0] // n_workers
+
+        def step_loss(params, mask, k):
+            losses = per_example_loss_fn(params, X, y)
+            return aggregation.fastest_k_weighted_loss(losses, mask, k, s)
+
+        grad_fn = jax.grad(step_loss)
+
+        def mean_loss(params):
+            return jnp.mean(per_example_loss_fn(params, X, y))
+
+        def one_step(carry: _Carry, _):
+            new_key, sub = jax.random.split(carry.key)
+            # k comes from the *previous* controller state (decided before the step).
+            k = carry.ctrl_state.k if hasattr(carry.ctrl_state, "k") else carry.ctrl_state[0]
+            mask, t_iter = aggregation.fastest_k_draw(straggler, sub, n_workers, k, comm)
+            g = grad_fn(carry.params, mask, k)
+            params = jax.tree.map(lambda p, gi: p - eta * gi, carry.params, g)
+            sim_time = carry.sim_time + t_iter
+            ctrl_state, _ = controller.update(carry.ctrl_state, g, sim_time)
+            return _Carry(params, ctrl_state, sim_time, new_key), k
+
+        def eval_block(carry: _Carry, length: int):
+            """Advance `length` iterations, then evaluate — all in-graph.
+
+            The per-iteration ops are tiny, so loop-trip overhead is material:
+            unrolling lets XLA fuse across consecutive iterations.
+            """
+            carry, ks = jax.lax.scan(
+                one_step, carry, None, length=length, unroll=min(unroll, length)
+            )
+            return carry, (carry.sim_time, mean_loss(carry.params), ks[-1])
+
+        def run_one(replica_key):
+            carry = _Carry(
+                params=params0,
+                ctrl_state=controller.init(params0),
+                sim_time=jnp.asarray(0.0, jnp.float32),
+                key=replica_key,
+            )
+            records = None
+            if n_full:
+                carry, records = jax.lax.scan(
+                    lambda c, _: eval_block(c, eval_every), carry, None, length=n_full
+                )
+            if rem:
+                carry, last = eval_block(carry, rem)
+                last = jax.tree.map(lambda x: x[None], last)
+                records = (
+                    last
+                    if records is None
+                    else jax.tree.map(lambda a, b: jnp.concatenate([a, b]), records, last)
+                )
+            return records
+
+        return jax.vmap(run_one)(keys)
+
+    return jax.jit(run_all)
 
 
 def run_monte_carlo(
@@ -95,8 +238,8 @@ def run_monte_carlo(
 
     Every worker owns a contiguous shard of m/n examples (the paper's
     horizontal partition); each participating worker contributes the full
-    partial gradient over its shard — eq. (2) — realized as the gradient of
-    the fastest-k weighted loss.
+    partial gradient over its shard — eq. (2) — realized through a
+    per-worker segment sum of the per-example losses.
     """
     if keys is None:
         if key is None or n_replicas is None:
@@ -109,65 +252,26 @@ def run_monte_carlo(
         raise ValueError(f"eval_every must be positive, got {eval_every}")
     if num_iters <= 0:
         raise ValueError(f"num_iters must be positive, got {num_iters}")
-    s = m // n_workers
-    n_full, rem = divmod(num_iters, eval_every)
 
-    def weighted_loss(params, weights):
-        return jnp.sum(weights * per_example_loss_fn(params, X, y))
-
-    grad_fn = jax.grad(weighted_loss)
-
-    def mean_loss(params):
-        return jnp.mean(per_example_loss_fn(params, X, y))
-
-    def one_step(carry: _Carry, _):
-        new_key, sub = jax.random.split(carry.key)
-        # k comes from the *previous* controller state (decided before the step).
-        k = carry.ctrl_state.k if hasattr(carry.ctrl_state, "k") else carry.ctrl_state[0]
-        weights, mask, t_iter = aggregation.fastest_k_iteration(
-            straggler, sub, n_workers, k, s, comm
+    cache_key = (
+        per_example_loss_fn,
+        n_workers,
+        _hashable(controller),
+        _hashable(straggler),
+        _hashable(comm),
+        float(eta),
+        int(num_iters),
+        int(eval_every),
+        int(unroll),
+    )
+    program = _PROGRAM_CACHE.get(cache_key)
+    if program is None:
+        program = _build_program(
+            per_example_loss_fn, n_workers, controller, straggler, comm,
+            eta, num_iters, eval_every, unroll,
         )
-        g = grad_fn(carry.params, weights)
-        params = jax.tree.map(lambda p, gi: p - eta * gi, carry.params, g)
-        sim_time = carry.sim_time + t_iter
-        ctrl_state, _ = controller.update(carry.ctrl_state, g, sim_time)
-        return _Carry(params, ctrl_state, sim_time, new_key), k
-
-    def eval_block(carry: _Carry, length: int):
-        """Advance `length` iterations, then evaluate — all in-graph.
-
-        The per-iteration ops are tiny, so loop-trip overhead is material:
-        unrolling lets XLA fuse across consecutive iterations.
-        """
-        carry, ks = jax.lax.scan(
-            one_step, carry, None, length=length, unroll=min(unroll, length)
-        )
-        return carry, (carry.sim_time, mean_loss(carry.params), ks[-1])
-
-    def run_one(replica_key):
-        carry = _Carry(
-            params=params0,
-            ctrl_state=controller.init(params0),
-            sim_time=jnp.asarray(0.0, jnp.float32),
-            key=replica_key,
-        )
-        records = None
-        if n_full:
-            carry, records = jax.lax.scan(
-                lambda c, _: eval_block(c, eval_every), carry, None, length=n_full
-            )
-        if rem:
-            carry, last = eval_block(carry, rem)
-            last = jax.tree.map(lambda x: x[None], last)
-            records = (
-                last
-                if records is None
-                else jax.tree.map(lambda a, b: jnp.concatenate([a, b]), records, last)
-            )
-        times, losses, ks = records
-        return times, losses, ks
-
-    times, losses, ks = jax.jit(jax.vmap(run_one))(keys)
+        _PROGRAM_CACHE[cache_key] = program
+    times, losses, ks = program(params0, X, y, keys)
     iteration = np.minimum(
         np.arange(1, times.shape[1] + 1) * eval_every, num_iters
     ).astype(np.int64)

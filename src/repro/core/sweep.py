@@ -1,0 +1,587 @@
+"""Single-dispatch sweep engine: grid-vmapped, device-sharded Monte-Carlo.
+
+The paper's artifacts (Figs. 2-3, the ablation) are *grids* — controller x
+straggler model x (n, k-policy) — of many-seed error-vs-wall-clock
+distributions.  ``run_monte_carlo`` runs one grid cell per dispatch; this
+module runs the **whole grid as one jitted program** by stacking every
+cell's configuration as pytree leaves and vmapping a grid axis on top of
+the replica axis:
+
+  * straggler parameters are packed vectors (``straggler.pack_params``)
+    selected by a ``lax.switch`` over ``straggler.SWEEP_FAMILIES``;
+  * controller hyperparameters (k0, step, thresh, burnin, k_max, decay,
+    ratio threshold, schedule switch times) are traced leaves interpreted
+    by a ``lax.switch`` over a unified controller-state superset;
+  * the comm model's (alpha, beta) and the step size eta are leaves too.
+
+Because *kinds* are traced int32 leaves, the compiled program is
+grid-composition-agnostic: changing which controllers/stragglers/
+hyperparameters populate the grid never retraces — only the static shapes
+(n_workers, iteration counts, grid size via jit's shape cache) do.
+
+The flattened grid x replica axis is sharded across all local devices via
+``jax.sharding.NamedSharding`` over a 1-D ``Mesh`` (with a ``shard_map``
+fallback path), so the engine scales with hardware; on a single device both
+paths degenerate to the plain vmap.
+
+Bitwise fidelity: every cell's trajectories are bitwise-equal to what a
+looped ``run_monte_carlo`` call produces for the same PRNG keys.  The
+per-iteration arithmetic (RNG split order, packed-parameter samplers, rank/
+mask/order-statistic path, segment-sum weighted gradient, controller update
+formulas including float32 constant rounding) deliberately mirrors the
+class-based engine op for op — tests/test_sweep.py pins this.
+
+API sketch::
+
+    cases = [
+        SweepCase(PflugController(n_workers=50, k0=10, step=10, thresh=10),
+                  Exponential(rate=1.0), eta=1e-2, label="pflug/exp"),
+        SweepCase(FixedKController(n_workers=50, k=40),
+                  Pareto(x_m=0.5, alpha=1.5), eta=1e-2, label="k40/pareto"),
+    ]
+    result = run_sweep(loss_fn, w0, X, y, n_workers=50, cases=cases,
+                       num_iters=40_000, keys=keys, eval_every=500)
+    stats = summarize_cells(result)     # one summarize() dict per cell
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import aggregation
+from repro.core.controller import (
+    FixedKController,
+    PflugController,
+    ScheduleController,
+    VarianceRatioController,
+    _tree_dot,
+    _tree_zeros_like,
+)
+from repro.core.montecarlo import MonteCarloResult, summarize
+from repro.core.straggler import (
+    SWEEP_FAMILIES,
+    StragglerModel,
+    family_index,
+    pack_params,
+)
+
+__all__ = [
+    "SweepCase",
+    "SweepResult",
+    "run_sweep",
+    "summarize_cells",
+    "product_cases",
+    "sweep_cache_stats",
+    "clear_sweep_cache",
+]
+
+# Controller kinds — lax.switch branch indices for the unified update.
+_FIXED, _PFLUG, _SCHEDULE, _VARIANCE_RATIO = range(4)
+
+_CTRL_KINDS = {
+    FixedKController: _FIXED,
+    PflugController: _PFLUG,
+    ScheduleController: _SCHEDULE,
+    VarianceRatioController: _VARIANCE_RATIO,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepCase:
+    """One grid cell: a controller/straggler/step-size/comm configuration."""
+
+    controller: Any
+    straggler: StragglerModel
+    eta: float
+    comm: aggregation.CommModel | None = None
+    label: str = ""
+
+    def name(self) -> str:
+        if self.label:
+            return self.label
+        return f"{type(self.controller).__name__}/{type(self.straggler).__name__}"
+
+
+def product_cases(
+    controllers: dict, stragglers: dict, eta: float,
+    comm: aggregation.CommModel | None = None,
+) -> list[SweepCase]:
+    """The full controller x straggler grid, labeled ``"<ctrl>|<strag>"``."""
+    return [
+        SweepCase(ctrl, strag, eta=eta, comm=comm, label=f"{cname}|{sname}")
+        for sname, strag in stragglers.items()
+        for cname, ctrl in controllers.items()
+    ]
+
+
+class _CellParams(NamedTuple):
+    """One grid cell as traced leaves (stacked to (G, ...) across the grid)."""
+
+    ctrl_kind: jax.Array  # int32 — index into the controller lax.switch
+    k0: jax.Array  # int32
+    step: jax.Array  # int32
+    thresh: jax.Array  # int32
+    burnin: jax.Array  # int32
+    k_max: jax.Array  # int32 — k cap (n_workers when the class left it None)
+    decay: jax.Array  # f32 — variance_ratio EMA decay d
+    one_minus_decay: jax.Array  # f32 — f32(1 - d) rounded exactly as the class does
+    ratio_thresh: jax.Array  # f32
+    switch_times: jax.Array  # f32 (S,) — schedule times, +inf padded
+    strag_kind: jax.Array  # int32 — index into SWEEP_FAMILIES
+    strag_p: jax.Array  # f32 (N_STRAGGLER_PARAMS,) — packed straggler params
+    comm_alpha: jax.Array  # f32
+    comm_beta: jax.Array  # f32
+    eta: jax.Array  # f32
+
+
+class _CtrlState(NamedTuple):
+    """Superset of every supported controller's state (policy-agnostic carry)."""
+
+    k: jax.Array
+    count_negative: jax.Array
+    count_iter: jax.Array
+    prev_grad: Any  # pytree — Pflug's g_{j-1}
+    ema_mean: Any  # pytree — variance_ratio's EMA(g)
+    ema_sq: jax.Array
+    have_prev: jax.Array
+    n_switches: jax.Array
+
+
+class SweepResult(NamedTuple):
+    """Grid of eval-point trajectories: ``time``/``loss``/``k`` are (G, R, E)."""
+
+    time: jax.Array
+    loss: jax.Array
+    k: jax.Array
+    iteration: np.ndarray
+    labels: tuple
+
+    def cell(self, g: int) -> MonteCarloResult:
+        """Cell g's trajectories as a MonteCarloResult (R, E)."""
+        return MonteCarloResult(
+            time=self.time[g], loss=self.loss[g], k=self.k[g], iteration=self.iteration
+        )
+
+
+def summarize_cells(result: SweepResult) -> dict:
+    """``{label: summarize(cell)}`` for every grid cell."""
+    return {
+        label: summarize(result.cell(g)) for g, label in enumerate(result.labels)
+    }
+
+
+def _cell_of(case: SweepCase, n_workers: int, n_slots: int) -> _CellParams:
+    c = case.controller
+    kind = _CTRL_KINDS.get(type(c))
+    if kind is None:
+        raise ValueError(
+            f"{type(c).__name__} is not sweepable; supported: "
+            f"{[t.__name__ for t in _CTRL_KINDS]}"
+        )
+    i32, f32 = np.int32, np.float32
+    k0, step, thresh, burnin = 1, 0, 0, 0
+    k_max = n_workers
+    decay = ratio_thresh = 0.0
+    times = np.full((n_slots,), np.inf, f32)
+    if kind == _FIXED:
+        k0 = c.k
+    elif kind == _PFLUG:
+        k0, step, thresh, burnin = c.k0, c.step, c.thresh, c.burnin
+        k_max = c.k_max if c.k_max is not None else n_workers
+    elif kind == _SCHEDULE:
+        k0, step = c.k0, c.step
+        st = np.asarray(list(c.switch_times), f32)
+        if st.size > n_slots:
+            raise ValueError(f"{st.size} switch times > {n_slots} slots")
+        times[: st.size] = st
+    elif kind == _VARIANCE_RATIO:
+        k0, step, burnin = c.k0, c.step, c.burnin
+        k_max = c.k_max if c.k_max is not None else n_workers
+        decay, ratio_thresh = c.decay, c.ratio_thresh
+    comm = case.comm or aggregation.CommModel()
+    return _CellParams(
+        ctrl_kind=i32(kind),
+        k0=i32(k0),
+        step=i32(step),
+        thresh=i32(thresh),
+        burnin=i32(burnin),
+        k_max=i32(k_max),
+        decay=f32(decay),
+        # The class computes (1 - d) in Python float64 and lets jax cast at
+        # use; rounding here the same way keeps cells bitwise-faithful.
+        one_minus_decay=f32(1.0 - decay),
+        ratio_thresh=f32(ratio_thresh),
+        switch_times=times,
+        strag_kind=i32(family_index(case.straggler)),
+        strag_p=pack_params(case.straggler),
+        comm_alpha=f32(comm.alpha),
+        comm_beta=f32(comm.beta),
+        eta=f32(case.eta),
+    )
+
+
+# ------------------------------------------------- unified controller update
+
+
+def _ctrl_init(cp: _CellParams, params_like) -> _CtrlState:
+    return _CtrlState(
+        k=jnp.asarray(cp.k0, jnp.int32),
+        count_negative=jnp.asarray(0, jnp.int32),
+        # Pflug starts its iteration counter at 1, variance_ratio at 0.
+        count_iter=jnp.where(cp.ctrl_kind == _VARIANCE_RATIO, 0, 1).astype(jnp.int32),
+        prev_grad=_tree_zeros_like(params_like),
+        ema_mean=_tree_zeros_like(params_like),
+        ema_sq=jnp.asarray(0.0, jnp.float32),
+        have_prev=jnp.asarray(False),
+        n_switches=jnp.asarray(0, jnp.int32),
+    )
+
+
+def _branch_fixed(cp, state, grads, sim_time, n_workers):
+    del cp, grads, sim_time, n_workers
+    return state, state.k
+
+
+def _branch_pflug(cp, state, grads, sim_time, n_workers):
+    del sim_time, n_workers
+    dot = _tree_dot(grads, state.prev_grad)
+    delta = jnp.where(state.have_prev, jnp.where(dot < 0, 1, -1), 0).astype(jnp.int32)
+    count_neg = state.count_negative + delta
+    do_switch = (
+        (count_neg > cp.thresh)
+        & (state.count_iter > cp.burnin)
+        & (state.k + cp.step <= cp.k_max)
+    )
+    new_k = jnp.where(do_switch, state.k + cp.step, state.k)
+    count_neg = jnp.where(do_switch, 0, count_neg)
+    count_iter = jnp.where(do_switch, 0, state.count_iter) + 1
+    new_state = state._replace(
+        k=new_k,
+        count_negative=count_neg,
+        count_iter=count_iter,
+        prev_grad=jax.tree.map(lambda g: g.astype(jnp.float32), grads),
+        have_prev=jnp.asarray(True),
+        n_switches=state.n_switches + do_switch.astype(jnp.int32),
+    )
+    return new_state, new_k
+
+
+def _branch_schedule(cp, state, grads, sim_time, n_workers):
+    del grads
+    n_passed = jnp.sum(sim_time >= cp.switch_times).astype(jnp.int32)
+    k = jnp.minimum(cp.k0 + cp.step * n_passed, n_workers)
+    return state._replace(k=k), k
+
+
+def _branch_variance_ratio(cp, state, grads, sim_time, n_workers):
+    del sim_time, n_workers
+    d, omd = cp.decay, cp.one_minus_decay
+    ema_mean = jax.tree.map(
+        lambda m, g: d * m + omd * g.astype(jnp.float32), state.ema_mean, grads
+    )
+    gsq = _tree_dot(grads, grads)
+    ema_sq = d * state.ema_sq + omd * gsq
+    mean_sq = _tree_dot(ema_mean, ema_mean)
+    ratio = mean_sq / jnp.maximum(ema_sq, 1e-30)
+    do_switch = (
+        (ratio < cp.ratio_thresh)
+        & (state.count_iter > cp.burnin)
+        & (state.k + cp.step <= cp.k_max)
+    )
+    new_k = jnp.where(do_switch, state.k + cp.step, state.k)
+    ema_mean = jax.tree.map(
+        lambda m: jnp.where(do_switch, jnp.zeros_like(m), m), ema_mean
+    )
+    ema_sq = jnp.where(do_switch, 0.0, ema_sq)
+    count_iter = jnp.where(do_switch, 0, state.count_iter) + 1
+    new_state = state._replace(
+        k=new_k,
+        ema_mean=ema_mean,
+        ema_sq=ema_sq,
+        count_iter=count_iter,
+        have_prev=jnp.asarray(True),
+        n_switches=state.n_switches + do_switch.astype(jnp.int32),
+    )
+    return new_state, new_k
+
+
+_CTRL_BRANCHES = (_branch_fixed, _branch_pflug, _branch_schedule, _branch_variance_ratio)
+
+
+def _ctrl_update(cp: _CellParams, state, grads, sim_time, n_workers: int):
+    branches = [
+        lambda cp, s, g, t, _b=b: _b(cp, s, g, t, n_workers) for b in _CTRL_BRANCHES
+    ]
+    return jax.lax.switch(cp.ctrl_kind, branches, cp, state, grads, sim_time)
+
+
+def _sample_times(strag_kind, strag_p, key, n_workers: int):
+    branches = [
+        lambda key, p, _c=cls: _c._sample_packed(key, n_workers, p)
+        for cls in SWEEP_FAMILIES
+    ]
+    return jax.lax.switch(strag_kind, branches, key, strag_p)
+
+
+# ---------------------------------------------------------------- the engine
+
+
+class _SweepCarry(NamedTuple):
+    params: Any
+    ctrl_state: _CtrlState
+    sim_time: jax.Array
+    key: jax.Array
+
+
+# (loss_fn, n_workers, num_iters, eval_every, unroll, n_slots, partition,
+#  ndev) -> jitted flat program.  Jit's own cache handles shapes (grid size,
+# params/X/y shapes) under each entry.
+_PROGRAM_CACHE: dict = {}
+_N_TRACES = 0
+
+
+def sweep_cache_stats() -> dict:
+    return {"programs": len(_PROGRAM_CACHE), "traces": _N_TRACES}
+
+
+def clear_sweep_cache() -> None:
+    global _N_TRACES
+    _PROGRAM_CACHE.clear()
+    _N_TRACES = 0
+
+
+def _build_flat_program(
+    per_example_loss_fn: Callable,
+    n_workers: int,
+    num_iters: int,
+    eval_every: int,
+    unroll: int,
+    partition: str,
+    mesh: Mesh | None,
+):
+    n_full, rem = divmod(num_iters, eval_every)
+
+    def make_run_one(params0, X, y):
+        """run_one closing over (possibly device-local) data — built inside
+        the shard_map body so no tracers are captured across its boundary."""
+        s = X.shape[0] // n_workers
+
+        def step_loss(params, mask, k):
+            losses = per_example_loss_fn(params, X, y)
+            return aggregation.fastest_k_weighted_loss(losses, mask, k, s)
+
+        grad_fn = jax.grad(step_loss)
+
+        def mean_loss(params):
+            return jnp.mean(per_example_loss_fn(params, X, y))
+
+        def run_one(cp: _CellParams, replica_key):
+            def one_step(carry: _SweepCarry, _):
+                new_key, sub = jax.random.split(carry.key)
+                k = carry.ctrl_state.k
+                times = _sample_times(cp.strag_kind, cp.strag_p, sub, n_workers)
+                mask, t_iter = aggregation.fastest_k_mask_time(times, k)
+                t_iter = t_iter + (cp.comm_alpha + cp.comm_beta * k.astype(jnp.float32))
+                g = grad_fn(carry.params, mask, k)
+                params = jax.tree.map(lambda p, gi: p - cp.eta * gi, carry.params, g)
+                sim_time = carry.sim_time + t_iter
+                ctrl_state, _ = _ctrl_update(cp, carry.ctrl_state, g, sim_time, n_workers)
+                return _SweepCarry(params, ctrl_state, sim_time, new_key), k
+
+            def eval_block(carry: _SweepCarry, length: int):
+                carry, ks = jax.lax.scan(
+                    one_step, carry, None, length=length, unroll=min(unroll, length)
+                )
+                return carry, (carry.sim_time, mean_loss(carry.params), ks[-1])
+
+            carry = _SweepCarry(
+                params=params0,
+                ctrl_state=_ctrl_init(cp, params0),
+                sim_time=jnp.asarray(0.0, jnp.float32),
+                key=replica_key,
+            )
+            records = None
+            if n_full:
+                carry, records = jax.lax.scan(
+                    lambda c, _: eval_block(c, eval_every), carry, None, length=n_full
+                )
+            if rem:
+                carry, last = eval_block(carry, rem)
+                last = jax.tree.map(lambda x: x[None], last)
+                records = (
+                    last
+                    if records is None
+                    else jax.tree.map(lambda a, b: jnp.concatenate([a, b]), records, last)
+                )
+            return records
+
+        return run_one
+
+    def run_flat(params0, X, y, cells: _CellParams, keys):
+        global _N_TRACES
+        _N_TRACES += 1
+        if partition == "shard_map":
+            from jax.experimental.shard_map import shard_map
+
+            def body(p0, Xl, yl, c, k):
+                return jax.vmap(make_run_one(p0, Xl, yl))(c, k)
+
+            sharded = shard_map(
+                body,
+                mesh=mesh,
+                in_specs=(
+                    jax.tree.map(lambda _: P(), params0),
+                    P(),
+                    P(),
+                    jax.tree.map(lambda _: P("cells"), cells),
+                    P("cells"),
+                ),
+                out_specs=P("cells"),
+                check_rep=False,
+            )
+            return sharded(params0, X, y, cells, keys)
+        return jax.vmap(make_run_one(params0, X, y))(cells, keys)
+
+    return jax.jit(run_flat)
+
+
+def run_sweep(
+    per_example_loss_fn: Callable,  # (params, X, y) -> per-example losses (m,)
+    params0,
+    X: jax.Array,
+    y: jax.Array,
+    n_workers: int,
+    cases: Sequence[SweepCase],
+    num_iters: int,
+    keys: jax.Array | None = None,
+    key: jax.Array | None = None,
+    n_replicas: int | None = None,
+    eval_every: int = 10,
+    unroll: int = 4,
+    n_switch_slots: int | None = None,
+    partition: str = "auto",
+) -> SweepResult:
+    """Run a G-cell x R-replica grid of fastest-k SGD as ONE jitted dispatch.
+
+    The default ``unroll`` is lower than ``run_monte_carlo``'s 8: the grid
+    axis already saturates the vector units, so deeper unrolling buys no
+    throughput here while the unified program's compile time scales with the
+    unrolled body (measured 34s at unroll=8 vs 7s at unroll=4 on a 15-cell
+    grid, identical warm runtime).  Unroll never affects the arithmetic —
+    trajectories are bitwise-identical across unroll values.
+
+    ``partition`` chooses how the flattened (G*R,) axis is laid out across
+    local devices:
+
+    * ``"auto"`` — inputs are placed with ``NamedSharding`` over a 1-D device
+      mesh and XLA's sharding propagation partitions the whole program (the
+      default; degenerates to plain vmap on one device);
+    * ``"shard_map"`` — explicit per-device blocks via
+      ``jax.experimental.shard_map`` (fallback for backends where automatic
+      propagation misbehaves);
+    * ``"none"`` — no device placement (single-device debugging).
+
+    The flat axis is padded to a device-count multiple by repeating cell 0
+    and the padding is dropped before results are returned.
+
+    Every cell (g, r) is bitwise-equal to
+    ``run_monte_carlo(..., controller=cases[g].controller, ...)``'s replica r
+    with the same key.
+    """
+    if not cases:
+        raise ValueError("cases must be non-empty")
+    labels = [c.name() for c in cases]
+    if len(set(labels)) != len(labels):
+        dupes = sorted({l for l in labels if labels.count(l) > 1})
+        raise ValueError(
+            f"duplicate cell labels {dupes}: give identically-typed cases "
+            "distinct SweepCase.label values (summarize_cells keys on them)"
+        )
+    if keys is None:
+        if key is None or n_replicas is None:
+            raise ValueError("pass either keys=(R keys) or key= and n_replicas=")
+        keys = jax.random.split(key, n_replicas)
+    m = X.shape[0]
+    if m % n_workers:
+        raise ValueError(f"m={m} not divisible by n_workers={n_workers}")
+    if eval_every <= 0:
+        raise ValueError(f"eval_every must be positive, got {eval_every}")
+    if num_iters <= 0:
+        raise ValueError(f"num_iters must be positive, got {num_iters}")
+    if partition not in ("auto", "shard_map", "none"):
+        raise ValueError(f"unknown partition {partition!r}")
+
+    if n_switch_slots is None:
+        n_switch_slots = max(
+            [1]
+            + [
+                len(list(c.controller.switch_times))
+                for c in cases
+                if isinstance(c.controller, ScheduleController)
+            ]
+        )
+    G, R = len(cases), keys.shape[0]
+    cells_np = [_cell_of(c, n_workers, n_switch_slots) for c in cases]
+    stacked = jax.tree.map(lambda *xs: np.stack(xs), *cells_np)
+
+    devices = jax.local_devices()
+    ndev = len(devices) if partition != "none" else 1
+    flat_n = G * R
+    pad = (-flat_n) % ndev
+    # flat lane f <- (cell cell_idx[f], replica rep_idx[f]); padding repeats
+    # lane 0 so every device gets a full block, then gets sliced off.
+    cell_idx = np.concatenate([np.repeat(np.arange(G), R), np.zeros(pad, np.int64)])
+    rep_idx = np.concatenate([np.tile(np.arange(R), G), np.zeros(pad, np.int64)])
+    flat_cells = jax.tree.map(lambda a: jnp.asarray(a)[cell_idx], stacked)
+    flat_keys = keys[rep_idx]
+
+    mesh = None
+    if partition != "none":
+        mesh = Mesh(np.asarray(devices), ("cells",))
+        batched = NamedSharding(mesh, P("cells"))
+        replicated = NamedSharding(mesh, P())
+        flat_cells = jax.device_put(flat_cells, batched)
+        flat_keys = jax.device_put(flat_keys, batched)
+        params0 = jax.device_put(params0, replicated)
+        X = jax.device_put(X, replicated)
+        y = jax.device_put(y, replicated)
+
+    cache_key = (
+        per_example_loss_fn,
+        n_workers,
+        int(num_iters),
+        int(eval_every),
+        int(unroll),
+        int(n_switch_slots),
+        partition,
+        ndev,
+    )
+    program = _PROGRAM_CACHE.get(cache_key)
+    if program is None:
+        program = _build_flat_program(
+            per_example_loss_fn, n_workers, num_iters, eval_every, unroll,
+            partition, mesh,
+        )
+        _PROGRAM_CACHE[cache_key] = program
+    times, losses, ks = program(params0, X, y, flat_cells, flat_keys)
+
+    n_evals = times.shape[1]
+    times, losses, ks = (
+        a[:flat_n].reshape(G, R, n_evals) for a in (times, losses, ks)
+    )
+    iteration = np.minimum(
+        np.arange(1, n_evals + 1) * eval_every, num_iters
+    ).astype(np.int64)
+    return SweepResult(
+        time=times,
+        loss=losses,
+        k=ks,
+        iteration=iteration,
+        labels=tuple(c.name() for c in cases),
+    )

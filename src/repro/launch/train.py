@@ -6,6 +6,15 @@ a real pod).  Logs loss / k / simulated wall-clock, checkpoints periodically.
 
     PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b --smoke \
         --steps 200 --batch 16 --seq 128 --controller pflug
+
+``--simulate`` switches to the paper-scale simulation entry instead of LM
+training: a controller x straggler grid of Monte-Carlo replicas on the
+synthetic linear-regression task, run as ONE compiled dispatch through the
+sweep engine (`repro.core.sweep`) and sharded across local devices:
+
+    PYTHONPATH=src python -m repro.launch.train --simulate \
+        --sim-controllers pflug,fixed --sim-stragglers exponential,pareto \
+        --steps 4000 --replicas 16 --n-workers 20
 """
 
 from __future__ import annotations
@@ -30,6 +39,81 @@ from repro.launch import steps as steps_lib
 from repro.models import build_model
 from repro.optim import get_optimizer
 from repro.shardctx import activation_sharding
+
+
+def _run_simulation(args):
+    """The train CLI's simulation entry: a grid sweep as one dispatch."""
+    from repro.core.sweep import SweepCase, run_sweep, summarize_cells
+    from repro.data import make_linreg_data
+
+    n, m, d = args.n_workers, args.sim_m, args.sim_d
+    if m % n:
+        raise SystemExit(f"--sim-m {m} must be divisible by --n-workers {n}")
+    data = make_linreg_data(jax.random.PRNGKey(args.seed), m=m, d=d)
+    L = 2 * float(jnp.linalg.eigvalsh(data.X.T @ data.X / m).max())
+    eta = 0.5 / L
+    straggler_names = [s for s in args.sim_stragglers.split(",") if s]
+    ctrl_names = [c for c in args.sim_controllers.split(",") if c]
+
+    def make_controller(name, straggler):
+        if name == "pflug":
+            return get_controller("pflug", n, k0=args.k0, step=args.k_step,
+                                  thresh=args.thresh, burnin=args.burnin)
+        if name == "fixed":
+            return get_controller("fixed", n, k=args.fixed_k)
+        if name == "variance_ratio":
+            return get_controller("variance_ratio", n, k0=args.k0,
+                                  step=args.k_step, burnin=args.burnin)
+        if name == "schedule":
+            sysm = theory.SGDSystem(
+                eta=eta, L=args.schedule_smoothness,
+                c=args.schedule_strong_convexity, sigma2=args.schedule_sigma2,
+                s=m // n, F0_gap=args.schedule_f0_gap, n=n, straggler=straggler,
+            )
+            times = theory.switching_times(
+                sysm, list(range(args.k0, n, args.k_step)), step=args.k_step)
+            return get_controller("schedule", n, switch_times=times,
+                                  k0=args.k0, step=args.k_step)
+        raise SystemExit(f"--sim-controllers: unknown controller {name!r}")
+
+    comm = CommModel(alpha=args.comm_alpha, beta=args.comm_beta)
+    cases = [
+        SweepCase(make_controller(cname, get_straggler_model(sname)),
+                  get_straggler_model(sname), eta=eta, comm=comm,
+                  label=f"{cname}|{sname}")
+        for sname in straggler_names
+        for cname in ctrl_names
+    ]
+    t0 = time.time()
+    stats = summarize_cells(run_sweep(
+        (lambda w, X, y: (X @ w - y) ** 2),
+        jnp.zeros((d,)), data.X, data.y, n_workers=n, cases=cases,
+        num_iters=args.steps, key=jax.random.PRNGKey(args.seed + 1),
+        n_replicas=args.replicas, eval_every=args.sim_eval_every,
+    ))
+    wall = time.time() - t0
+    print(json.dumps({
+        "grid_cells": len(cases), "replicas": args.replicas,
+        "iters": args.steps, "dispatches": 1,
+        "devices": jax.local_device_count(), "wall_s": round(wall, 2),
+    }))
+    for label, s in stats.items():
+        print(json.dumps({
+            "cell": label,
+            "final_excess": float(s["loss_mean"][-1] - data.f_star),
+            "final_excess_ci95": float(s["loss_ci95"][-1]),
+            "sim_time": round(float(s["time_mean"][-1]), 2),
+            "k_final": round(float(s["k_mean"][-1]), 2),
+        }, ), flush=True)
+    if args.sim_csv:
+        with open(args.sim_csv, "w") as f:
+            f.write("cell,iteration,time_mean,time_ci95,loss_mean,loss_ci95,k_mean\n")
+            for label, s in stats.items():
+                for i in range(len(s["iteration"])):
+                    f.write(f"{label},{s['iteration'][i]},{s['time_mean'][i]:.3f},"
+                            f"{s['time_ci95'][i]:.4f},{s['loss_mean'][i]:.6g},"
+                            f"{s['loss_ci95'][i]:.6g},{s['k_mean'][i]:.2f}\n")
+        print(f"wrote {args.sim_csv}")
 
 
 def main(argv=None):
@@ -74,7 +158,28 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--production-mesh", action="store_true",
                     help="use the 16x16 production mesh (requires 256 devices)")
+    # --- simulation entry (paper-scale linreg sweep instead of LM training)
+    ap.add_argument("--simulate", action="store_true",
+                    help="run a controller x straggler Monte-Carlo sweep on the "
+                         "paper's synthetic linreg task (one compiled dispatch "
+                         "via repro.core.sweep) instead of LM training")
+    ap.add_argument("--sim-controllers", default="pflug,fixed",
+                    help="comma list from {pflug,fixed,schedule,variance_ratio}")
+    ap.add_argument("--sim-stragglers", default="exponential,pareto",
+                    help="comma list of registered straggler models")
+    ap.add_argument("--replicas", type=int, default=16,
+                    help="simulate: Monte-Carlo replicas per grid cell")
+    ap.add_argument("--sim-m", type=int, default=400,
+                    help="simulate: number of examples")
+    ap.add_argument("--sim-d", type=int, default=20,
+                    help="simulate: problem dimension")
+    ap.add_argument("--sim-eval-every", type=int, default=500)
+    ap.add_argument("--sim-csv", default=None,
+                    help="simulate: write per-cell trajectories to this CSV")
     args = ap.parse_args(argv)
+
+    if args.simulate:
+        return _run_simulation(args)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)

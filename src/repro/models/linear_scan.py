@@ -23,6 +23,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def wkv6_chunked(
@@ -36,8 +37,11 @@ def wkv6_chunked(
 ) -> Tuple[jax.Array, jax.Array]:
     """RWKV-6 wkv with data-dependent diagonal decay.  Returns (y, s_T).
 
-    Computed in float32 internally; decays handled in log space with per-chunk
-    re-centering so ratios stay bounded by the chunk length.
+    Computed in float32 internally; decays handled in log space.  The
+    intra-chunk scores use the same straddle-boundary factorization as the
+    Pallas kernel (one masked matmul per power-of-two level, every exponent
+    <= 0), so no decay strength can overflow f32 — the earlier midpoint
+    re-centering overflowed on same-side pairs under strong decay.
     """
     b, t, h, kdim = k.shape
     vdim = v.shape[-1]
@@ -61,22 +65,41 @@ def wkv6_chunked(
     if s0 is None:
         s0 = jnp.zeros((b, h, kdim, vdim), f32)
 
+    # Straddle-boundary pairing, precomputed host-side (chunk is static):
+    # every ordered pair tau < t straddles a unique power-of-two-aligned
+    # boundary (the odd multiple of the largest 2^j in (tau, t]).  Factoring
+    # each score as exp(lwe_t - li_ref) * exp(li_ref - lwi_tau) with the
+    # reference at that boundary keeps both exponents <= 0 (partial decay
+    # sums), so nothing can overflow f32 — unlike a single midpoint
+    # reference, which only protects pairs that straddle the midpoint.
+    pos = np.arange(chunk)
+    levels = []
+    lev = 1
+    while lev < chunk:
+        blkpos = pos // lev
+        is_q = (blkpos % 2) == 1  # second half of its 2*lev-block -> query side
+        mref = np.where(is_q, blkpos * lev, (blkpos + 1) * lev) - 1  # (C,)
+        tb, taub = blkpos[:, None], blkpos[None, :]
+        pair_mask = (tb // 2 == taub // 2) & (tb % 2 == 1) & (taub % 2 == 0)
+        levels.append((is_q, mref, pair_mask))
+        lev *= 2
+
     def chunk_body(s, xs):
         rc, kc, vc, lwi, lwe, lwt = xs  # lwt: (B,H,K) total log-decay of the chunk
         # inter-chunk: y_t += (r_t * exp(lw_exc_t)) @ S
         r_dec = rc * jnp.exp(lwe)  # (B,C,H,K)
         y_inter = jnp.einsum("bchk,bhkv->bchv", r_dec, s)
         # intra-chunk: scores[t,tau] = sum_k r_t[k] k_tau[k] exp(lwe_t[k]-lwi_tau[k]), tau < t
-        # Re-centered at the chunk MIDPOINT so each factor's exponent is bounded
-        # by the half-chunk cumulative decay (end-centering overflows f32 for
-        # strong decays at chunk >= 64).
-        lref = lwi[:, chunk // 2]  # (B,H,K)
-        k_dec = kc * jnp.exp(-lwi + lref[:, None])
-        r_dec2 = rc * jnp.exp(lwe - lref[:, None])
-        scores = jnp.einsum("bchk,bdhk->bhcd", r_dec2, k_dec)  # (B,H,C,C) c=query d=key
-        # where (not multiply): masked future entries can be inf, and inf*0=NaN
-        cm = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_), k=-1)  # strictly lower: tau < t
-        scores = jnp.where(cm, scores, 0.0)
+        scores = jnp.zeros((b, h, chunk, chunk), jnp.float32)  # c=query d=key
+        for is_q, mref, pair_mask in levels:
+            li_ref = lwi[:, mref]  # (B,C,H,K) — reference row per position
+            qsel = jnp.asarray(is_q)[None, :, None, None]
+            # exponents are <= 0 by construction for active rows; exp(-inf)=0
+            # silences the opposite side (its pairs are masked out anyway).
+            e_q = jnp.where(qsel, jnp.minimum(lwe - li_ref, 0.0), -jnp.inf)
+            e_k = jnp.where(qsel, -jnp.inf, jnp.minimum(li_ref - lwi, 0.0))
+            part = jnp.einsum("bchk,bdhk->bhcd", rc * jnp.exp(e_q), kc * jnp.exp(e_k))
+            scores = scores + jnp.where(jnp.asarray(pair_mask), part, 0.0)
         # current-token bonus: diag term u
         bonus = jnp.einsum("bchk,hk,bchk->bch", rc, u, kc)
         y_intra = jnp.einsum("bhcd,bdhv->bchv", scores, vc) + bonus[..., None] * vc

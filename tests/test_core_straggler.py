@@ -75,6 +75,58 @@ def test_registry():
         get_straggler_model("nope")
 
 
+def test_bimodal_quantile_round_trips_cdf():
+    """F(F^{-1}(u)) == u for the numerically-inverted mixture CDF."""
+    bm = Bimodal(fast_mean=1.0, slow_mean=10.0, p_slow=0.1)
+    u = np.linspace(0.001, 0.999, 97)
+    x = bm.quantile(u)
+    assert np.all(np.diff(x) > 0), "quantile must be strictly increasing"
+    cdf = (1 - bm.p_slow) * (1 - np.exp(-x / bm.fast_mean)) + bm.p_slow * (
+        1 - np.exp(-x / bm.slow_mean)
+    )
+    np.testing.assert_allclose(cdf, u, atol=2e-4)
+
+
+def test_order_stat_quadrature_matches_analytic_exponential():
+    """The Beta-density quadrature (the generic fallback every model without
+    closed-form order statistics uses) must reproduce Exponential's analytic
+    E[X_(k)] and Var[X_(k)] to 1e-3 across a (k, n) grid."""
+    e = Exponential(rate=1.3)
+    for n in (2, 5, 10, 25, 50):
+        for k in sorted({1, 2, n // 2, n - 1, n} - {0}):
+            m1, m2 = _order_stat_moments(e.quantile, k, n)
+            assert m1 == pytest.approx(e.mean_order_statistic(k, n), abs=1e-3), (k, n)
+            assert m2 - m1 * m1 == pytest.approx(
+                e.var_order_statistic(k, n), abs=1e-3
+            ), (k, n)
+
+
+def test_packed_params_round_trip_reconstructs_each_model():
+    """pack_params' slot ordering must agree with what _sample_packed
+    consumes: rebuilding each model from its packed vector (using the
+    documented slot layout, independent of _sample_packed) must produce
+    bitwise-identical samples."""
+    from repro.core.straggler import family_index, pack_params
+
+    rebuild = {
+        Exponential: lambda p: Exponential(rate=p[0]),
+        ShiftedExponential: lambda p: ShiftedExponential(shift=p[0], rate=p[1]),
+        Pareto: lambda p: Pareto(x_m=p[0], alpha=p[1]),
+        Bimodal: lambda p: Bimodal(fast_mean=p[0], slow_mean=p[1], p_slow=p[2]),
+        Deterministic: lambda p: Deterministic(value=p[0]),
+    }
+    key = jax.random.PRNGKey(5)
+    for model in MODELS:
+        assert family_index(model) is not None
+        p = pack_params(model)
+        assert p.shape == (3,) and p.dtype == np.float32, type(model).__name__
+        clone = rebuild[type(model)]([float(v) for v in p])
+        np.testing.assert_array_equal(
+            np.asarray(model.sample(key, 32)), np.asarray(clone.sample(key, 32)),
+            err_msg=f"packed slot order broken for {type(model).__name__}",
+        )
+
+
 # ---------------- aggregation ----------------
 
 

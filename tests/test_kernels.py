@@ -137,9 +137,17 @@ def test_wkv_kernel_dtypes(dtype):
 
 def test_wkv_strong_decay_stability():
     """Strong decays (the f32-overflow regime for naive factorization) must
-    stay finite and accurate thanks to midpoint re-centering."""
+    stay finite and accurate thanks to the straddle-boundary factorization —
+    on the Pallas kernel AND the pure-jnp reference path (which inherited the
+    same fix; its old midpoint re-centering overflowed on same-side pairs)."""
+    from repro.models.linear_scan import wkv6_chunked
+
     r, kk, vv, w, u, s0 = _wkv_inputs(1, 128, 1, 8, 8, decay_scale=1.0)
     y_ref, s_ref = _wkv_naive(r, kk, vv, w, u, s0)
     y, s = wkv6(r, kk, vv, w, u, s0, chunk=64)
     assert bool(jnp.all(jnp.isfinite(y)))
     np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=2e-3, rtol=5e-3)
+    yj, sj = wkv6_chunked(r, kk, vv, w, u, s0, chunk=64)
+    assert bool(jnp.all(jnp.isfinite(yj))), "jnp reference path produced non-finite"
+    np.testing.assert_allclose(np.asarray(yj), np.asarray(y_ref), atol=2e-3, rtol=5e-3)
+    np.testing.assert_allclose(np.asarray(sj), np.asarray(s_ref), atol=2e-3, rtol=5e-3)

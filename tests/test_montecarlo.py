@@ -19,7 +19,8 @@ from repro.core.controller import (
     VarianceRatioController,
     get_controller,
 )
-from repro.core.montecarlo import run_monte_carlo, summarize
+from repro.core.aggregation import CommModel
+from repro.core.montecarlo import program_cache_stats, run_monte_carlo, summarize
 from repro.core.simulate import simulate_fastest_k
 from repro.core.straggler import Exponential
 from repro.data import make_linreg_data
@@ -157,6 +158,52 @@ def test_history_honors_eval_every_exactly(linreg):
     h = simulate_fastest_k(_loss, jnp.zeros((D,)), data.X, data.y,
                            num_iters=5, eval_every=10, **common)
     assert len(h["loss"]) == 1
+
+
+# ----------------------------------- bugfix: per-call jit(vmap) recompilation
+
+
+def test_repeated_identical_call_performs_no_new_trace(linreg):
+    """The compiled program is cached at module level: a second call with an
+    equal-valued configuration must not trace (the seed bug rebuilt
+    jax.jit(jax.vmap(run_one)) per call, retracing every time)."""
+    data, eta = linreg
+
+    def call():
+        return _mc(
+            data, eta,
+            PflugController(n_workers=N, k0=1, step=2, thresh=4, burnin=7),
+            keys=jax.random.split(jax.random.PRNGKey(11), 3),
+            num_iters=110, eval_every=40,
+        )
+
+    r1 = call()
+    traces_after_first = program_cache_stats()["traces"]
+    r2 = call()
+    assert program_cache_stats()["traces"] == traces_after_first, (
+        "identical second call re-traced the program"
+    )
+    np.testing.assert_array_equal(np.asarray(r1.loss), np.asarray(r2.loss))
+    # a genuinely different config (new hyperparameter value) must trace anew
+    _mc(data, eta, PflugController(n_workers=N, k0=1, step=2, thresh=5, burnin=7),
+        keys=jax.random.split(jax.random.PRNGKey(11), 3),
+        num_iters=110, eval_every=40)
+    assert program_cache_stats()["traces"] == traces_after_first + 1
+
+
+def test_cache_key_handles_schedule_times_and_comm(linreg):
+    """List-valued controller fields and comm models must be cache-keyable."""
+    data, eta = linreg
+    ctrl = ScheduleController(n_workers=N, switch_times=[2.0, 7.0], k0=1, step=1)
+    kw = dict(keys=jax.random.split(jax.random.PRNGKey(2), 2),
+              num_iters=60, eval_every=30, comm=CommModel(alpha=0.1, beta=0.01))
+    r1 = _mc(data, eta, ctrl, **kw)
+    traces = program_cache_stats()["traces"]
+    r2 = _mc(data, eta,
+             ScheduleController(n_workers=N, switch_times=[2.0, 7.0], k0=1, step=1),
+             **kw)
+    assert program_cache_stats()["traces"] == traces
+    np.testing.assert_array_equal(np.asarray(r1.time), np.asarray(r2.time))
 
 
 # --------------------------------------- bugfix: sketch seed reproducibility

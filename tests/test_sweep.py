@@ -1,0 +1,258 @@
+"""Tests for the single-dispatch sweep engine (repro.core.sweep) and the
+per-iteration hot-path optimizations it rides on (top-k ranks, segment-sum
+weighted gradient, module-level program caches)."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation
+from repro.core.aggregation import CommModel
+from repro.core.controller import (
+    FixedKController,
+    PflugController,
+    ScheduleController,
+    SketchedPflugController,
+    VarianceRatioController,
+)
+from repro.core.montecarlo import run_monte_carlo
+from repro.core.sweep import (
+    SweepCase,
+    product_cases,
+    run_sweep,
+    summarize_cells,
+    sweep_cache_stats,
+)
+from repro.core.straggler import Bimodal, Exponential, Pareto
+from repro.data import make_linreg_data
+
+N, M, D = 10, 200, 5
+
+
+@pytest.fixture(scope="module")
+def linreg():
+    data = make_linreg_data(jax.random.PRNGKey(0), m=M, d=D)
+    L = 2 * float(jnp.linalg.eigvalsh(data.X.T @ data.X / M).max())
+    return data, 0.5 / L
+
+
+def _loss(w, X, y):
+    return (X @ w - y) ** 2
+
+
+def _assert_cells_match_looped(res, cases, data, keys, num_iters, eval_every):
+    """Each sweep cell must be BITWISE-equal to its looped run_monte_carlo."""
+    for g, c in enumerate(cases):
+        ref = run_monte_carlo(
+            _loss, jnp.zeros((D,)), data.X, data.y, n_workers=N,
+            controller=c.controller, straggler=c.straggler, eta=c.eta,
+            comm=c.comm, num_iters=num_iters, keys=keys, eval_every=eval_every,
+        )
+        for name, a, b in (("time", res.time[g], ref.time),
+                           ("loss", res.loss[g], ref.loss),
+                           ("k", res.k[g], ref.k)):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), (
+                f"cell {g} ({c.name()}) {name} differs from looped engine"
+            )
+
+
+# --------------------------------------- the acceptance grid: one dispatch
+
+
+def test_fig2_style_grid_single_dispatch_bitwise(linreg):
+    """>= 2 controllers x >= 2 straggler models x R >= 32 replicas as ONE
+    compiled dispatch, every cell bitwise-equal to looped run_monte_carlo."""
+    data, eta = linreg
+    keys = jax.random.split(jax.random.PRNGKey(7), 32)
+    cases = product_cases(
+        controllers={
+            "pflug": PflugController(n_workers=N, k0=2, step=2, thresh=5, burnin=10),
+            "fixed_k3": FixedKController(n_workers=N, k=3),
+        },
+        stragglers={
+            "exp": Exponential(rate=1.0),
+            "pareto": Pareto(x_m=0.5, alpha=1.5),
+        },
+        eta=eta,
+    )
+    before = sweep_cache_stats()["traces"]
+    res = run_sweep(_loss, jnp.zeros((D,)), data.X, data.y, n_workers=N,
+                    cases=cases, num_iters=200, keys=keys, eval_every=50)
+    assert sweep_cache_stats()["traces"] <= before + 1, "grid took >1 trace"
+    assert res.time.shape == (4, 32, 4)
+    assert res.labels == ("pflug|exp", "fixed_k3|exp", "pflug|pareto", "fixed_k3|pareto")
+    _assert_cells_match_looped(res, cases, data, keys, 200, 50)
+
+
+def test_schedule_variance_ratio_and_comm_cells_bitwise(linreg):
+    """The remaining controller kinds + a non-trivial comm model."""
+    data, eta = linreg
+    keys = jax.random.split(jax.random.PRNGKey(3), 4)
+    cases = [
+        SweepCase(ScheduleController(n_workers=N, switch_times=[5.0, 12.0], k0=1, step=2),
+                  Bimodal(fast_mean=0.5, slow_mean=5.0, p_slow=0.1), eta),
+        SweepCase(VarianceRatioController(n_workers=N, k0=1, step=2, burnin=10),
+                  Exponential(rate=2.0), eta, comm=CommModel(alpha=0.1, beta=0.02)),
+    ]
+    res = run_sweep(_loss, jnp.zeros((D,)), data.X, data.y, n_workers=N,
+                    cases=cases, num_iters=120, keys=keys, eval_every=40)
+    _assert_cells_match_looped(res, cases, data, keys, 120, 40)
+
+
+def test_sweep_program_is_grid_composition_agnostic(linreg):
+    """Kinds/hyperparams are traced leaves: swapping which controllers and
+    stragglers populate an equally-shaped grid must NOT retrace."""
+    data, eta = linreg
+    keys = jax.random.split(jax.random.PRNGKey(1), 3)
+    kw = dict(n_workers=N, num_iters=80, keys=keys, eval_every=40)
+    grid_a = [
+        SweepCase(FixedKController(n_workers=N, k=2), Exponential(rate=1.0), eta),
+        SweepCase(PflugController(n_workers=N, k0=1, step=1, thresh=3), Pareto(), eta),
+    ]
+    run_sweep(_loss, jnp.zeros((D,)), data.X, data.y, cases=grid_a, **kw)
+    before = sweep_cache_stats()["traces"]
+    grid_b = [
+        SweepCase(VarianceRatioController(n_workers=N, k0=1, step=3, burnin=5),
+                  Bimodal(), eta),
+        SweepCase(FixedKController(n_workers=N, k=7), Exponential(rate=0.5), eta * 0.5),
+    ]
+    res = run_sweep(_loss, jnp.zeros((D,)), data.X, data.y, cases=grid_b, **kw)
+    assert sweep_cache_stats()["traces"] == before, "same-shape grid retraced"
+    _assert_cells_match_looped(res, grid_b, data, keys, 80, 40)
+
+
+def test_sweep_rejects_duplicate_labels(linreg):
+    data, eta = linreg
+    cases = [SweepCase(FixedKController(n_workers=N, k=2), Exponential(), eta),
+             SweepCase(FixedKController(n_workers=N, k=5), Exponential(), eta)]
+    # both auto-label as FixedKController/Exponential -> the second would
+    # silently vanish from summarize_cells
+    with pytest.raises(ValueError, match="duplicate cell labels"):
+        run_sweep(_loss, jnp.zeros((D,)), data.X, data.y, n_workers=N,
+                  cases=cases, num_iters=10, key=jax.random.PRNGKey(0),
+                  n_replicas=2)
+
+
+def test_sweep_rejects_unsupported_controller(linreg):
+    data, eta = linreg
+    with pytest.raises(ValueError, match="not sweepable"):
+        run_sweep(_loss, jnp.zeros((D,)), data.X, data.y, n_workers=N,
+                  cases=[SweepCase(SketchedPflugController(n_workers=N),
+                                   Exponential(), eta)],
+                  num_iters=10, key=jax.random.PRNGKey(0), n_replicas=2)
+
+
+def test_summarize_cells_shapes(linreg):
+    data, eta = linreg
+    cases = [SweepCase(FixedKController(n_workers=N, k=2), Exponential(), eta,
+                       label="a"),
+             SweepCase(FixedKController(n_workers=N, k=5), Exponential(), eta,
+                       label="b")]
+    res = run_sweep(_loss, jnp.zeros((D,)), data.X, data.y, n_workers=N,
+                    cases=cases, num_iters=90, key=jax.random.PRNGKey(0),
+                    n_replicas=4, eval_every=30)
+    stats = summarize_cells(res)
+    assert set(stats) == {"a", "b"}
+    assert stats["a"]["n_replicas"] == 4
+    assert stats["a"]["loss_mean"].shape == (3,)
+    assert list(stats["b"]["iteration"]) == [30, 60, 90]
+
+
+# -------------------------------------------------- worker_ranks top-k path
+
+
+@pytest.mark.parametrize("n", [4, 8, 64, 130, 257, 1024])
+def test_topk_ranks_match_pairwise_with_ties(n):
+    """The n log n top_k path must assign exactly the ranks the O(n^2)
+    pairwise path does — ties included — under vmap, for n up to 1024."""
+    times = jax.random.exponential(jax.random.PRNGKey(n), (8, n))
+    times = jnp.round(times * 8) / 8  # force plenty of exact ties
+    pair = jax.vmap(lambda t: aggregation.worker_ranks(t, method="pairwise"))(times)
+    topk = jax.vmap(lambda t: aggregation.worker_ranks(t, method="topk"))(times)
+    np.testing.assert_array_equal(np.asarray(pair), np.asarray(topk))
+    # each row is a permutation of 0..n-1
+    assert np.array_equal(np.sort(np.asarray(topk[0])), np.arange(n))
+
+
+def test_worker_ranks_auto_dispatches_on_static_n():
+    small = jax.random.uniform(jax.random.PRNGKey(0), (17,))
+    big = jax.random.uniform(jax.random.PRNGKey(1), (aggregation._TOPK_CROSSOVER_N,))
+    np.testing.assert_array_equal(
+        np.asarray(aggregation.worker_ranks(small)),
+        np.asarray(aggregation.worker_ranks(small, method="topk")),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(aggregation.worker_ranks(big)),
+        np.asarray(aggregation.worker_ranks(big, method="pairwise")),
+    )
+    with pytest.raises(ValueError, match="rank method"):
+        aggregation.worker_ranks(small, method="quick")
+
+
+def test_fastest_k_weighted_loss_matches_reference_weights():
+    """The segment-sum form must equal sum(per_example_weights * losses)."""
+    key = jax.random.PRNGKey(0)
+    n, s = 6, 4
+    losses = jax.random.normal(key, (n * s,))
+    mask = jnp.asarray([1, 0, 1, 1, 0, 0], jnp.float32)
+    k = jnp.asarray(3, jnp.int32)
+    ref = jnp.sum(aggregation.per_example_weights(mask, k, s) * losses)
+    new = aggregation.fastest_k_weighted_loss(losses, mask, k, s)
+    np.testing.assert_allclose(float(new), float(ref), rtol=1e-6)
+
+
+# ------------------------------------------------- device-sharded execution
+
+_SHARDED_SCRIPT = """
+import jax, jax.numpy as jnp, numpy as np
+assert jax.local_device_count() == 4, jax.local_device_count()
+from repro.core.montecarlo import run_monte_carlo
+from repro.core.sweep import SweepCase, run_sweep
+from repro.core.controller import FixedKController, PflugController
+from repro.core.straggler import Exponential, Pareto
+from repro.data import make_linreg_data
+
+N, M, D = 10, 100, 4
+data = make_linreg_data(jax.random.PRNGKey(0), m=M, d=D)
+loss = lambda w, X, y: (X @ w - y) ** 2
+L = 2 * float(jnp.linalg.eigvalsh(data.X.T @ data.X / M).max())
+eta = 0.5 / L
+w0 = jnp.zeros((D,))
+keys = jax.random.split(jax.random.PRNGKey(7), 3)  # 3x3=9 lanes -> pads to 12
+cases = [
+    SweepCase(PflugController(n_workers=N, k0=2, step=2, thresh=5, burnin=10),
+              Exponential(rate=1.0), eta),
+    SweepCase(FixedKController(n_workers=N, k=3), Pareto(x_m=0.5, alpha=1.5), eta),
+    SweepCase(FixedKController(n_workers=N, k=7), Exponential(rate=2.0), eta),
+]
+refs = [run_monte_carlo(loss, w0, data.X, data.y, n_workers=N,
+                        controller=c.controller, straggler=c.straggler,
+                        eta=c.eta, num_iters=80, keys=keys, eval_every=40)
+        for c in cases]
+for part in ("auto", "shard_map"):
+    res = run_sweep(loss, w0, data.X, data.y, n_workers=N, cases=cases,
+                    num_iters=80, keys=keys, eval_every=40, partition=part)
+    for g, ref in enumerate(refs):
+        assert np.array_equal(np.asarray(res.time[g]), np.asarray(ref.time)), (part, g)
+        assert np.array_equal(np.asarray(res.loss[g]), np.asarray(ref.loss)), (part, g)
+        assert np.array_equal(np.asarray(res.k[g]), np.asarray(ref.k)), (part, g)
+print("SHARDED_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sweep_sharded_across_forced_host_devices():
+    """Both partition paths, on a forced 4-device host platform, with a
+    non-divisible (padded) flat axis — bitwise vs the looped engine."""
+    src = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    env = dict(os.environ, XLA_FLAGS="--xla_force_host_platform_device_count=4")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", _SHARDED_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "SHARDED_OK" in proc.stdout
