@@ -1,0 +1,78 @@
+"""Perf-regression gate: compare a fresh sweep_bench record against the
+committed baseline (``BENCH_sweep.json`` at the repo root).
+
+    python benchmarks/check_bench.py CURRENT BASELINE [--max-ratio 1.5]
+
+The comparison is on the **warm** single-dispatch time (``sweep_s.warm``) —
+the number a hot-path or program-cache regression moves first (a
+retrace-per-call bug turns warm into cold, a 2-10x jump).
+
+* Same-shape records (equal smoke flag / n_cells / num_iters / n_replicas):
+  direct ratio, fail above ``--max-ratio``.
+* Mismatched shapes (CI's ``--smoke`` grid vs the committed full-grid
+  baseline): the smoke grid is STRICTLY smaller work than the full grid, so
+  its warm time exceeding ``max-ratio`` x the full-grid warm time can only
+  mean a catastrophic regression — that ceiling is what CI enforces.
+
+Exit status 0 = within budget, 1 = regression (message on stderr).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _shape(rec: dict) -> tuple:
+    return (
+        bool(rec.get("smoke")),
+        rec.get("grid", {}).get("n_cells"),
+        rec.get("num_iters"),
+        rec.get("n_replicas"),
+    )
+
+
+def check(current: dict, baseline: dict, max_ratio: float) -> str | None:
+    """Returns an error message, or None when the current record passes."""
+    cur_warm = current["sweep_s"]["warm"]
+    base_warm = baseline["sweep_s"]["warm"]
+    if base_warm <= 0:
+        return f"baseline warm time is non-positive ({base_warm})"
+    ratio = cur_warm / base_warm
+    same_shape = _shape(current) == _shape(baseline)
+    kind = "same-shape" if same_shape else "smaller-grid ceiling"
+    if ratio > max_ratio:
+        return (
+            f"warm sweep time regressed {ratio:.2f}x vs baseline "
+            f"({cur_warm:.3f}s vs {base_warm:.3f}s, {kind} comparison, "
+            f"limit {max_ratio}x).  current={_shape(current)} "
+            f"baseline={_shape(baseline)}"
+        )
+    if not current.get("bitwise_equal", False):
+        return "current record reports bitwise_equal=false vs the looped engine"
+    print(
+        f"check_bench OK: warm {cur_warm:.3f}s vs baseline {base_warm:.3f}s "
+        f"({ratio:.2f}x, {kind}, limit {max_ratio}x)"
+    )
+    return None
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="freshly produced BENCH_sweep.json")
+    ap.add_argument("baseline", help="committed baseline BENCH_sweep.json")
+    ap.add_argument("--max-ratio", type=float, default=1.5)
+    args = ap.parse_args()
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    err = check(current, baseline, args.max_ratio)
+    if err:
+        print(f"check_bench FAIL: {err}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

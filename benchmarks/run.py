@@ -14,6 +14,7 @@ from benchmarks import (  # noqa: E402
     fig1,
     fig2,
     fig3,
+    fig_hetero,
     kernels_bench,
     roofline_table,
     sweep_bench,
@@ -27,6 +28,7 @@ def main() -> None:
         ("fig1", lambda: [fig1.run("results/fig1.csv")]),
         ("fig2", lambda: [fig2.run("results/fig2.csv")]),
         ("fig3", lambda: [fig3.run("results/fig3.csv")]),
+        ("fig_hetero", lambda: [fig_hetero.run("results/fig_hetero.csv")]),
         ("ablation", lambda: [ablation.run("results/ablation.csv")]),
         ("sweep", lambda: [sweep_bench.run("results/BENCH_sweep.json")]),
         ("kernels", kernels_bench.run),

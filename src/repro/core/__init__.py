@@ -1,7 +1,10 @@
 """Core: the paper's contribution — adaptive fastest-k distributed SGD.
 
 Modules:
-  straggler    — iid response-time models + order statistics
+  straggler    — response-time models + order statistics; per-worker
+                 heterogeneous fleets (WorkerFleet) with time-varying
+                 rate schedules (RateSchedule) and the per-slot packed-
+                 parameter protocol behind the sweep engine
   aggregation  — fastest-k masks / per-example weights / renewal clock
   controller   — Algorithm-1 Pflug controller, sketched Pflug, fixed-k,
                  Theorem-1 schedule, variance-ratio (beyond paper)
@@ -43,7 +46,11 @@ from repro.core.controller import (  # noqa: F401
     get_controller,
 )
 from repro.core.montecarlo import MonteCarloResult, run_monte_carlo, summarize  # noqa: F401
-from repro.core.straggler import get_straggler_model  # noqa: F401
+from repro.core.straggler import (  # noqa: F401
+    RateSchedule,
+    WorkerFleet,
+    get_straggler_model,
+)
 from repro.core.sweep import (  # noqa: F401
     SweepCase,
     SweepResult,

@@ -44,6 +44,7 @@ __all__ = [
     "fastest_k_weighted_loss",
     "fastest_k_mask_time",
     "fastest_k_draw",
+    "active_worker_mean_loss",
 ]
 
 
@@ -91,7 +92,14 @@ def worker_ranks(times: jax.Array, method: str = "auto") -> jax.Array:
       Above ``_TOPK_CROSSOVER_N`` (measured) this wins, e.g. 100-1000-worker
       scenario sweeps.
 
-    Both assign the rank a stable argsort would, ties included.
+    Both assign the rank a stable argsort would, ties included.  +inf
+    entries (the heterogeneous engines' *inactive* worker slots) are
+    ordinary values to both paths: they compare strictly after every finite
+    time and tie among themselves by index, so with ``a`` active (finite)
+    slots the inactive slots occupy ranks a..n-1 in slot order — they can
+    never enter a fastest-k set with k <= a (pinned by
+    tests/test_hetero.py on both paths, straddling the crossover).  NaN
+    times are NOT supported on either path.
     """
     n = times.shape[0]
     if method == "auto":
@@ -209,6 +217,30 @@ def fastest_k_draw(
     if comm is not None:
         t = t + comm.time(k)
     return mask, t
+
+
+def active_worker_mean_loss(
+    per_example_losses: jax.Array, n_active: jax.Array, n_slots: int,
+    examples_per_worker: int,
+) -> jax.Array:
+    """Mean loss over the ACTIVE workers' examples (the first n_active shards).
+
+    With n as a grid axis, cells are padded to ``n_slots`` worker slots and
+    only the first ``n_active`` own data that trains; their shards are the
+    cell's objective.  ``n_active`` may be traced (it is a grid leaf in the
+    sweep engine), so both forms are computed and selected: when every slot
+    is active the result is **bitwise-equal** to ``jnp.mean(losses)`` — the
+    pre-heterogeneity engines' eval — because ``jnp.where`` passes the
+    selected operand through unchanged.
+    """
+    s = examples_per_worker
+    full = jnp.mean(per_example_losses)
+    shard_sums = per_example_losses.reshape(n_slots, s).sum(axis=1)
+    active = (jnp.arange(n_slots) < n_active).astype(per_example_losses.dtype)
+    masked = jnp.dot(shard_sums, active) / (
+        n_active.astype(per_example_losses.dtype) * s
+    )
+    return jnp.where(n_active == n_slots, full, masked)
 
 
 def fastest_k_iteration(

@@ -52,7 +52,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aggregation
-from repro.core.straggler import StragglerModel
+from repro.core.straggler import (
+    StragglerModel,
+    WorkerFleet,
+    apply_rate_schedule,
+    pack_params_per_worker,
+    pack_schedule,
+    sample_times_per_worker,
+)
 
 __all__ = [
     "MonteCarloResult",
@@ -147,7 +154,18 @@ def _build_program(
 ):
     n_full, rem = divmod(num_iters, eval_every)
 
-    def run_all(params0, X, y, keys):
+    # Heterogeneous fleets go through the per-worker packed protocol — the
+    # SAME in-graph functions the sweep engine traces, with the packed
+    # matrices baked in as constants, so a sweep cell carrying this fleet's
+    # rows is bitwise-equal to this program.  Scalar models keep the original
+    # class path untouched (homogeneous trajectories stay bit-stable).
+    is_fleet = isinstance(straggler, WorkerFleet)
+    if is_fleet:
+        pmat_np, kinds_np, n_active = pack_params_per_worker(straggler, n_workers)
+        n_knots = len(straggler.schedule.times) if straggler.schedule else 0
+        sched_np = pack_schedule(straggler.schedule, max(1, n_knots))
+
+    def run_all(params0, X, y, keys, n_active_arg=None):
         global _N_TRACES
         _N_TRACES += 1  # Python side effect: fires once per trace, never per run
         s = X.shape[0] // n_workers
@@ -158,14 +176,44 @@ def _build_program(
 
         grad_fn = jax.grad(step_loss)
 
-        def mean_loss(params):
-            return jnp.mean(per_example_loss_fn(params, X, y))
+        if is_fleet:
+            pmat = jnp.asarray(pmat_np)
+            kinds = jnp.asarray(kinds_np)
+            sched = tuple(jnp.asarray(a) for a in sched_np)
+
+            def draw(sub, sim_time, k):
+                pm = apply_rate_schedule(pmat, *sched, sim_time)
+                times = sample_times_per_worker(kinds, pm, sub)
+                mask, t = aggregation.fastest_k_mask_time(times, k)
+                if comm is not None:
+                    t = t + comm.time(k)
+                return mask, t
+
+            def mean_loss(params):
+                losses = per_example_loss_fn(params, X, y)
+                # n_active rides in as a traced argument, NOT a baked
+                # constant: a constant active mask lets XLA fold the masked
+                # eval reduction into a different summation order than the
+                # sweep engine's traced-leaf version, breaking bitwise
+                # equality in the last ulp.
+                return aggregation.active_worker_mean_loss(
+                    losses, n_active_arg, n_workers, s
+                )
+
+        else:
+
+            def draw(sub, sim_time, k):
+                del sim_time
+                return aggregation.fastest_k_draw(straggler, sub, n_workers, k, comm)
+
+            def mean_loss(params):
+                return jnp.mean(per_example_loss_fn(params, X, y))
 
         def one_step(carry: _Carry, _):
             new_key, sub = jax.random.split(carry.key)
             # k comes from the *previous* controller state (decided before the step).
             k = carry.ctrl_state.k if hasattr(carry.ctrl_state, "k") else carry.ctrl_state[0]
-            mask, t_iter = aggregation.fastest_k_draw(straggler, sub, n_workers, k, comm)
+            mask, t_iter = draw(sub, carry.sim_time, k)
             g = grad_fn(carry.params, mask, k)
             params = jax.tree.map(lambda p, gi: p - eta * gi, carry.params, g)
             sim_time = carry.sim_time + t_iter
@@ -217,7 +265,7 @@ def run_monte_carlo(
     y: jax.Array,
     n_workers: int,
     controller,
-    straggler: StragglerModel,
+    straggler: StragglerModel | WorkerFleet,
     eta: float,
     num_iters: int,
     keys: jax.Array | None = None,
@@ -240,6 +288,14 @@ def run_monte_carlo(
     horizontal partition); each participating worker contributes the full
     partial gradient over its shard — eq. (2) — realized through a
     per-worker segment sum of the per-example losses.
+
+    ``straggler`` may be a ``WorkerFleet``: per-worker (heterogeneous)
+    response distributions, an optional in-graph rate schedule driven by the
+    carried sim_time, and — when the fleet has fewer active models than
+    ``n_workers`` slots — +inf-padded inactive slots whose shards are held
+    out of both training and the eval loss.  The fleet path is the bitwise
+    ground truth the sweep engine's heterogeneous cells are pinned against;
+    plain ``StragglerModel`` configurations are untouched by it.
     """
     if keys is None:
         if key is None or n_replicas is None:
@@ -252,6 +308,16 @@ def run_monte_carlo(
         raise ValueError(f"eval_every must be positive, got {eval_every}")
     if num_iters <= 0:
         raise ValueError(f"num_iters must be positive, got {num_iters}")
+    if isinstance(straggler, WorkerFleet):
+        # Mirror sweep._cell_of: a controller sized to more workers than the
+        # fleet has active would wait on +inf inactive slots once k exceeds
+        # n_active, silently saturating every trajectory's clock to inf.
+        cn = getattr(controller, "n_workers", None)
+        if cn is not None and cn != straggler.n_active:
+            raise ValueError(
+                f"fleet has {straggler.n_active} models but "
+                f"controller.n_workers={cn}"
+            )
 
     cache_key = (
         per_example_loss_fn,
@@ -271,7 +337,12 @@ def run_monte_carlo(
             eta, num_iters, eval_every, unroll,
         )
         _PROGRAM_CACHE[cache_key] = program
-    times, losses, ks = program(params0, X, y, keys)
+    if isinstance(straggler, WorkerFleet):
+        times, losses, ks = program(
+            params0, X, y, keys, jnp.asarray(straggler.n_active, jnp.int32)
+        )
+    else:
+        times, losses, ks = program(params0, X, y, keys)
     iteration = np.minimum(
         np.arange(1, times.shape[1] + 1) * eval_every, num_iters
     ).astype(np.int64)

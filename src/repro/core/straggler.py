@@ -16,7 +16,7 @@ stays a single compiled program.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -29,19 +29,34 @@ __all__ = [
     "Pareto",
     "Bimodal",
     "Deterministic",
+    "RateSchedule",
+    "WorkerFleet",
     "get_straggler_model",
     "SWEEP_FAMILIES",
     "N_STRAGGLER_PARAMS",
+    "INACTIVE_FAMILY",
     "pack_params",
+    "pack_params_per_worker",
+    "pack_schedule",
     "family_index",
+    "sample_times_per_worker",
+    "schedule_multiplier",
+    "apply_rate_schedule",
 ]
 
-# Packed-parameter protocol (used by repro.core.sweep): every family exposes
-# ``_sample_packed(key, n, p)`` with p a (N_STRAGGLER_PARAMS,) float32 vector,
-# and ``sample`` delegates to it.  This makes the class path and the
-# grid-stacked path *the same arithmetic* — a sweep cell's trajectories are
-# bitwise-equal to the per-model engine's — while letting a `lax.switch` over
-# ``SWEEP_FAMILIES`` vectorize heterogeneous straggler grids in one program.
+# Packed-parameter protocol (used by repro.core.sweep and the heterogeneous
+# path of repro.core.montecarlo): every family exposes
+#
+#   ``_sample_packed(key, n, p)``      — p a (N_STRAGGLER_PARAMS,) f32 vector,
+#   ``_sample_packed_rows(key, pmat)`` — pmat a (n, N_STRAGGLER_PARAMS) f32
+#                                        *per-worker* parameter matrix,
+#
+# and ``sample`` delegates to the scalar form.  Both forms draw their base
+# randomness identically (one key, shape (n,)) and differ only in whether the
+# parameter transform broadcasts a scalar or applies elementwise per row, so
+# a matrix whose rows all equal ``p`` is **bitwise-equal** to the scalar path
+# — the invariant that lets homogeneous grids keep their pre-heterogeneity
+# trajectories bit for bit (pinned by tests/test_hetero.py).
 N_STRAGGLER_PARAMS = 3
 
 
@@ -58,6 +73,16 @@ class StragglerModel:
         """Sample from the packed parameter vector (see N_STRAGGLER_PARAMS)."""
         raise NotImplementedError
 
+    @staticmethod
+    def _sample_packed_rows(key: jax.Array, pmat: jax.Array) -> jax.Array:
+        """Per-worker form: row i of pmat parameterizes worker i's draw.
+
+        MUST consume the key exactly as ``_sample_packed`` does (same RNG
+        calls, same shapes) so identical rows reproduce the scalar path
+        bitwise.
+        """
+        raise NotImplementedError
+
     def packed(self) -> np.ndarray:
         """This instance's parameters as the packed (N_STRAGGLER_PARAMS,) vector."""
         raise NotImplementedError
@@ -65,6 +90,11 @@ class StragglerModel:
     # --- host-side analytics (numpy; used by theory.py and benchmarks) ---
     def quantile(self, u: np.ndarray) -> np.ndarray:
         """Inverse CDF, vectorized over u in (0,1)."""
+        raise NotImplementedError
+
+    def cdf(self, x: np.ndarray) -> np.ndarray:
+        """CDF, vectorized over x (host-side numpy; heterogeneous order
+        statistics integrate the Poisson-binomial recurrence over these)."""
         raise NotImplementedError
 
     def mean_order_statistic(self, k: int, n: int) -> float:
@@ -118,11 +148,20 @@ class Exponential(StragglerModel):
     def _sample_packed(key, n, p):
         return jax.random.exponential(key, (n,), dtype=jnp.float32) / p[0]
 
+    @staticmethod
+    def _sample_packed_rows(key, pmat):
+        n = pmat.shape[0]
+        return jax.random.exponential(key, (n,), dtype=jnp.float32) / pmat[:, 0]
+
     def packed(self):
         return np.array([self.rate, 0.0, 0.0], np.float32)
 
     def quantile(self, u):
         return -np.log1p(-u) / self.rate
+
+    def cdf(self, x):
+        x = np.asarray(x, np.float64)
+        return np.where(x > 0, -np.expm1(-self.rate * np.maximum(x, 0.0)), 0.0)
 
     def mean_order_statistic(self, k: int, n: int) -> float:
         return (_harmonic(n) - _harmonic(n - k)) / self.rate
@@ -144,11 +183,24 @@ class ShiftedExponential(StragglerModel):
     def _sample_packed(key, n, p):
         return p[0] + jax.random.exponential(key, (n,), dtype=jnp.float32) / p[1]
 
+    @staticmethod
+    def _sample_packed_rows(key, pmat):
+        n = pmat.shape[0]
+        return pmat[:, 0] + jax.random.exponential(key, (n,), dtype=jnp.float32) / pmat[:, 1]
+
     def packed(self):
         return np.array([self.shift, self.rate, 0.0], np.float32)
 
     def quantile(self, u):
         return self.shift - np.log1p(-u) / self.rate
+
+    def cdf(self, x):
+        x = np.asarray(x, np.float64)
+        return np.where(
+            x > self.shift,
+            -np.expm1(-self.rate * np.maximum(x - self.shift, 0.0)),
+            0.0,
+        )
 
     def mean_order_statistic(self, k: int, n: int) -> float:
         return self.shift + (_harmonic(n) - _harmonic(n - k)) / self.rate
@@ -166,11 +218,23 @@ class Pareto(StragglerModel):
         u = jax.random.uniform(key, (n,), dtype=jnp.float32, minval=1e-7, maxval=1.0)
         return p[0] * u ** (-1.0 / p[1])
 
+    @staticmethod
+    def _sample_packed_rows(key, pmat):
+        n = pmat.shape[0]
+        u = jax.random.uniform(key, (n,), dtype=jnp.float32, minval=1e-7, maxval=1.0)
+        return pmat[:, 0] * u ** (-1.0 / pmat[:, 1])
+
     def packed(self):
         return np.array([self.x_m, self.alpha, 0.0], np.float32)
 
     def quantile(self, u):
         return self.x_m * (1.0 - u) ** (-1.0 / self.alpha)
+
+    def cdf(self, x):
+        x = np.asarray(x, np.float64)
+        return np.where(
+            x >= self.x_m, 1.0 - (self.x_m / np.maximum(x, self.x_m)) ** self.alpha, 0.0
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -193,6 +257,15 @@ class Bimodal(StragglerModel):
         ts = jax.random.exponential(k3, (n,), dtype=jnp.float32) * p[1]
         return jnp.where(slow, ts, tf)
 
+    @staticmethod
+    def _sample_packed_rows(key, pmat):
+        n = pmat.shape[0]
+        k1, k2, k3 = jax.random.split(key, 3)
+        slow = jax.random.bernoulli(k1, pmat[:, 2], (n,))
+        tf = jax.random.exponential(k2, (n,), dtype=jnp.float32) * pmat[:, 0]
+        ts = jax.random.exponential(k3, (n,), dtype=jnp.float32) * pmat[:, 1]
+        return jnp.where(slow, ts, tf)
+
     def packed(self):
         return np.array([self.fast_mean, self.slow_mean, self.p_slow], np.float32)
 
@@ -203,6 +276,14 @@ class Bimodal(StragglerModel):
             1 - np.exp(-x / self.slow_mean)
         )
         return np.interp(u, cdf, x)
+
+    def cdf(self, x):
+        x = np.asarray(x, np.float64)
+        xm = np.maximum(x, 0.0)
+        c = (1 - self.p_slow) * -np.expm1(-xm / self.fast_mean) + self.p_slow * (
+            -np.expm1(-xm / self.slow_mean)
+        )
+        return np.where(x > 0, c, 0.0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -216,14 +297,25 @@ class Deterministic(StragglerModel):
         del key
         return jnp.full((n,), p[0], dtype=jnp.float32)
 
+    @staticmethod
+    def _sample_packed_rows(key, pmat):
+        del key
+        return pmat[:, 0].astype(jnp.float32)
+
     def packed(self):
         return np.array([self.value, 0.0, 0.0], np.float32)
 
     def quantile(self, u):
         return np.full_like(np.asarray(u, dtype=np.float64), self.value)
 
+    def cdf(self, x):
+        return (np.asarray(x, np.float64) >= self.value).astype(np.float64)
+
     def mean_order_statistic(self, k: int, n: int) -> float:
         return self.value
+
+    def var_order_statistic(self, k: int, n: int) -> float:
+        return 0.0
 
 
 _REGISTRY = {
@@ -262,3 +354,213 @@ def get_straggler_model(name: str, **kwargs) -> StragglerModel:
     if name not in _REGISTRY:
         raise ValueError(f"unknown straggler model {name!r}; options: {sorted(_REGISTRY)}")
     return _REGISTRY[name](**kwargs)
+
+
+# --------------------------------------------------------------------------
+# Per-worker (heterogeneous) protocol.
+#
+# The iid assumption of the paper is the special case of a *fleet*: each
+# worker slot carries its own packed parameter row and family index, packed
+# into an (n_slots, N_STRAGGLER_PARAMS) float32 matrix plus an (n_slots,)
+# int32 family vector.  Slots beyond ``n_active`` are padded with the
+# INACTIVE row (Deterministic +inf), so they rank strictly after every
+# active worker and never enter the fastest-k set — which is what lets the
+# sweep engine treat n itself as an ordinary grid axis (all cells padded to
+# a common n_slots).
+# --------------------------------------------------------------------------
+
+# lax.switch branch index and packed row used for padded (inactive) slots.
+INACTIVE_FAMILY = SWEEP_FAMILIES.index(Deterministic)
+_INACTIVE_ROW = np.array([np.inf, 0.0, 0.0], np.float32)
+
+SCHEDULE_MODES = {"step": 0, "linear": 1}
+
+
+@dataclasses.dataclass(frozen=True)
+class RateSchedule:
+    """Time-varying drift of one packed-parameter leaf, applied in-graph.
+
+    The multiplier m(t) of simulated wall-clock time t scales column
+    ``leaf`` of the per-worker parameter matrix before each iteration's
+    draw (all other columns are multiplied by exactly 1.0, a bitwise
+    no-op):
+
+    * ``mode="step"``   — piecewise-constant: m(t) = scales[j] for the
+      largest j with t >= times[j]; 1.0 before times[0].
+    * ``mode="linear"`` — piecewise-linear interpolation through the
+      (times[j], scales[j]) knots, constant beyond the ends (so put a
+      (t0, 1.0) knot first to drift *from* the nominal rate).
+
+    Example: ``RateSchedule(times=(50.0,), scales=(0.4,))`` on an
+    Exponential fleet multiplies every worker's rate by 0.4 at t=50 — a
+    fleet-wide mid-run slowdown.
+    """
+
+    times: Sequence[float]
+    scales: Sequence[float]
+    mode: str = "step"
+    leaf: int = 0
+
+    def __post_init__(self):
+        times = tuple(float(t) for t in self.times)
+        scales = tuple(float(s) for s in self.scales)
+        object.__setattr__(self, "times", times)
+        object.__setattr__(self, "scales", scales)
+        if len(times) != len(scales):
+            raise ValueError(f"{len(times)} times vs {len(scales)} scales")
+        if list(times) != sorted(times):
+            raise ValueError(f"schedule times must be non-decreasing: {times}")
+        if self.mode not in SCHEDULE_MODES:
+            raise ValueError(f"unknown mode {self.mode!r}; options {sorted(SCHEDULE_MODES)}")
+        if not 0 <= self.leaf < N_STRAGGLER_PARAMS:
+            raise ValueError(f"leaf {self.leaf} outside [0, {N_STRAGGLER_PARAMS})")
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerFleet:
+    """A heterogeneous worker fleet: one straggler model per worker slot.
+
+    ``models[i]`` is worker i's response-time distribution (mixed families
+    are first-class — e.g. 70% Exponential / 30% Pareto).  An optional
+    ``schedule`` drifts one parameter leaf over simulated time; the engines
+    (run_monte_carlo / run_sweep) apply it in-graph from the carried
+    sim_time — ``sample`` here draws at the *nominal* (t=0) parameters.
+    """
+
+    models: Sequence[StragglerModel]
+    schedule: Optional[RateSchedule] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "models", tuple(self.models))
+        if not self.models:
+            raise ValueError("WorkerFleet needs at least one model")
+        for m in self.models:
+            family_index(m)  # raises for non-sweepable models
+
+    @property
+    def n_active(self) -> int:
+        return len(self.models)
+
+    def sample(self, key: jax.Array, n: int) -> jax.Array:
+        """Draw one response time per slot (padded slots sample +inf)."""
+        pmat, kinds, _ = pack_params_per_worker(self, n)
+        return sample_times_per_worker(jnp.asarray(kinds), jnp.asarray(pmat), key)
+
+    # --- host-side analytics (consumed by theory.SGDSystem) ---
+    def mean_order_statistic(self, k: int, n: int) -> float:
+        m1, _ = self._moments(k, n)
+        return float(m1)
+
+    def var_order_statistic(self, k: int, n: int) -> float:
+        m1, m2 = self._moments(k, n)
+        return float(m2 - m1 * m1)
+
+    def _moments(self, k: int, n: int):
+        if n != self.n_active:
+            raise ValueError(f"order statistic over n={n} workers but fleet has "
+                             f"{self.n_active} active models")
+        from repro.core import theory  # lazy: theory imports this module
+
+        return theory.hetero_order_stat_moments(self.models, k)
+
+
+def pack_params_per_worker(
+    spec, n_slots: int, n_active: Optional[int] = None
+) -> tuple[np.ndarray, np.ndarray, int]:
+    """Pack a fleet (or a broadcast scalar model) into per-slot matrices.
+
+    Returns ``(pmat, kinds, n_active)`` with ``pmat`` float32 of shape
+    ``(n_slots, N_STRAGGLER_PARAMS)`` and ``kinds`` int32 of shape
+    ``(n_slots,)``.  A plain ``StragglerModel`` broadcasts its packed row
+    over ``n_active`` slots (default: all) — the iid special case.  Slots
+    past ``n_active`` get the INACTIVE row (Deterministic +inf).
+    """
+    if isinstance(spec, WorkerFleet):
+        if n_active is not None and n_active != spec.n_active:
+            raise ValueError(f"n_active={n_active} but fleet has {spec.n_active} models")
+        models = spec.models
+    else:
+        models = (spec,) * (n_slots if n_active is None else n_active)
+    if len(models) > n_slots:
+        raise ValueError(f"{len(models)} active workers > {n_slots} slots")
+    pmat = np.tile(_INACTIVE_ROW, (n_slots, 1))
+    kinds = np.full((n_slots,), INACTIVE_FAMILY, np.int32)
+    for i, m in enumerate(models):
+        pmat[i] = pack_params(m)
+        kinds[i] = family_index(m)
+    return pmat, kinds, len(models)
+
+
+def pack_schedule(
+    schedule: Optional[RateSchedule], n_slots: int
+) -> tuple[np.int32, np.int32, np.ndarray, np.ndarray]:
+    """Pack a RateSchedule as fixed-width leaves: (mode, leaf, times, scales).
+
+    ``times`` is +inf-padded and ``scales`` last-value-padded to ``n_slots``
+    knots; a ``None`` schedule packs to all-+inf times with unit scales, so
+    ``schedule_multiplier`` evaluates to exactly 1.0 at every t (applying it
+    is then a bitwise no-op).  Padded knots never change the multiplier:
+    the step count ignores +inf and linear interpolation toward an +inf
+    abscissa has exactly-zero slope.
+    """
+    i32, f32 = np.int32, np.float32
+    times = np.full((n_slots,), np.inf, f32)
+    scales = np.ones((n_slots,), f32)
+    if schedule is None or not len(schedule.times):
+        return i32(SCHEDULE_MODES["step"]), i32(0), times, scales
+    st = np.asarray(schedule.times, f32)
+    sc = np.asarray(schedule.scales, f32)
+    if st.size > n_slots:
+        raise ValueError(f"{st.size} schedule knots > {n_slots} slots")
+    times[: st.size] = st
+    scales[: sc.size] = sc
+    scales[sc.size :] = sc[-1]
+    return i32(SCHEDULE_MODES[schedule.mode]), i32(schedule.leaf), times, scales
+
+
+def schedule_multiplier(mode, times, scales, t) -> jax.Array:
+    """m(t) for packed schedule leaves (all arguments may be traced).
+
+    Both modes are evaluated and selected on ``mode`` so the arithmetic is
+    uniform across grid cells (a vmapped grid never branches on values).
+    """
+    t = jnp.asarray(t, jnp.float32)
+    s = times.shape[0]
+    n_passed = jnp.sum(t >= times).astype(jnp.int32)
+    m_step = jnp.where(
+        n_passed == 0, jnp.float32(1.0), scales[jnp.clip(n_passed - 1, 0, s - 1)]
+    )
+    m_linear = jnp.interp(t, times, scales)
+    return jnp.where(mode == SCHEDULE_MODES["linear"], m_linear, m_step)
+
+
+def apply_rate_schedule(pmat, mode, leaf, times, scales, t) -> jax.Array:
+    """Scale column ``leaf`` of the per-worker matrix by m(t).
+
+    Every other column is multiplied by exactly 1.0 — a bitwise identity —
+    so unscheduled cells reproduce their static-parameter trajectories bit
+    for bit.
+    """
+    mult = schedule_multiplier(mode, times, scales, t)
+    col = jnp.arange(pmat.shape[1]) == leaf
+    return pmat * jnp.where(col, mult, jnp.float32(1.0))[None, :]
+
+
+def sample_times_per_worker(kinds, pmat, key) -> jax.Array:
+    """One response time per worker slot from per-slot families/parameters.
+
+    Every family draws its base randomness over the full (n_slots,) axis
+    from the SAME key — exactly as its scalar ``_sample_packed`` does — and
+    a per-slot ``lax.switch`` (vmapped over slots, so it lowers to a select
+    over the family draws) picks slot i's value from family ``kinds[i]``.
+    A fleet whose rows all equal one model's packed vector is therefore
+    bitwise-identical to that model's ``sample``; padded INACTIVE slots
+    come out +inf.
+    """
+    stacked = jnp.stack(
+        [cls._sample_packed_rows(key, pmat) for cls in SWEEP_FAMILIES]
+    )  # (n_families, n_slots)
+    branches = [lambda col, _f=f: col[_f] for f in range(len(SWEEP_FAMILIES))]
+    return jax.vmap(
+        lambda kind, col: jax.lax.switch(kind, branches, col)
+    )(kinds, stacked.T)

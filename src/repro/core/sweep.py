@@ -7,17 +7,28 @@ module runs the **whole grid as one jitted program** by stacking every
 cell's configuration as pytree leaves and vmapping a grid axis on top of
 the replica axis:
 
-  * straggler parameters are packed vectors (``straggler.pack_params``)
-    selected by a ``lax.switch`` over ``straggler.SWEEP_FAMILIES``;
+  * straggler parameters are **per-worker** packed matrices
+    (``straggler.pack_params_per_worker``: an (n_slots, P) float32 row per
+    worker slot plus an (n_slots,) family-index vector) sampled through a
+    per-slot ``lax.switch`` over ``straggler.SWEEP_FAMILIES`` — the iid
+    paper model is the broadcast-row special case, mixed fleets
+    (``straggler.WorkerFleet``) are first-class, and an optional
+    ``RateSchedule`` drifts a parameter leaf in-graph as a function of the
+    carried sim_time;
+  * ``n`` is an ordinary grid axis: every cell is padded to a common
+    ``n_slots``; slots past the cell's ``n_active`` sample +inf, rank
+    strictly after every active worker, and their data shards are held out
+    of both the gradient and the eval loss;
   * controller hyperparameters (k0, step, thresh, burnin, k_max, decay,
-    ratio threshold, schedule switch times) are traced leaves interpreted
-    by a ``lax.switch`` over a unified controller-state superset;
+    ratio threshold, schedule switch times, sketch sign constants) are
+    traced leaves interpreted by a ``lax.switch`` over a unified
+    controller-state superset;
   * the comm model's (alpha, beta) and the step size eta are leaves too.
 
 Because *kinds* are traced int32 leaves, the compiled program is
 grid-composition-agnostic: changing which controllers/stragglers/
 hyperparameters populate the grid never retraces — only the static shapes
-(n_workers, iteration counts, grid size via jit's shape cache) do.
+(n_slots, iteration counts, grid size via jit's shape cache) do.
 
 The flattened grid x replica axis is sharded across all local devices via
 ``jax.sharding.NamedSharding`` over a 1-D ``Mesh`` (with a ``shard_map``
@@ -47,6 +58,7 @@ API sketch::
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Any, Callable, NamedTuple, Sequence
 
 import jax
@@ -59,16 +71,19 @@ from repro.core.controller import (
     FixedKController,
     PflugController,
     ScheduleController,
+    SketchedPflugController,
     VarianceRatioController,
     _tree_dot,
     _tree_zeros_like,
 )
 from repro.core.montecarlo import MonteCarloResult, summarize
 from repro.core.straggler import (
-    SWEEP_FAMILIES,
     StragglerModel,
-    family_index,
-    pack_params,
+    WorkerFleet,
+    apply_rate_schedule,
+    pack_params_per_worker,
+    pack_schedule,
+    sample_times_per_worker,
 )
 
 __all__ = [
@@ -82,22 +97,30 @@ __all__ = [
 ]
 
 # Controller kinds — lax.switch branch indices for the unified update.
-_FIXED, _PFLUG, _SCHEDULE, _VARIANCE_RATIO = range(4)
+_FIXED, _PFLUG, _SCHEDULE, _VARIANCE_RATIO, _SKETCHED_PFLUG = range(5)
 
 _CTRL_KINDS = {
     FixedKController: _FIXED,
     PflugController: _PFLUG,
     ScheduleController: _SCHEDULE,
     VarianceRatioController: _VARIANCE_RATIO,
+    SketchedPflugController: _SKETCHED_PFLUG,
 }
 
 
 @dataclasses.dataclass(frozen=True)
 class SweepCase:
-    """One grid cell: a controller/straggler/step-size/comm configuration."""
+    """One grid cell: a controller/straggler/step-size/comm configuration.
+
+    ``straggler`` may be a ``WorkerFleet`` (heterogeneous per-worker models,
+    optionally with a time-varying ``RateSchedule``).  The cell's *active*
+    worker count is ``controller.n_workers``; when it is smaller than the
+    engine's ``n_workers`` slot count the remaining slots are inactive
+    (+inf response times, data held out) — this is how n varies per cell.
+    """
 
     controller: Any
-    straggler: StragglerModel
+    straggler: StragglerModel | WorkerFleet
     eta: float
     comm: aggregation.CommModel | None = None
     label: str = ""
@@ -128,13 +151,19 @@ class _CellParams(NamedTuple):
     step: jax.Array  # int32
     thresh: jax.Array  # int32
     burnin: jax.Array  # int32
-    k_max: jax.Array  # int32 — k cap (n_workers when the class left it None)
+    k_max: jax.Array  # int32 — k cap (n_active when the class left it None)
     decay: jax.Array  # f32 — variance_ratio EMA decay d
     one_minus_decay: jax.Array  # f32 — f32(1 - d) rounded exactly as the class does
     ratio_thresh: jax.Array  # f32
     switch_times: jax.Array  # f32 (S,) — schedule times, +inf padded
-    strag_kind: jax.Array  # int32 — index into SWEEP_FAMILIES
-    strag_p: jax.Array  # f32 (N_STRAGGLER_PARAMS,) — packed straggler params
+    n_active: jax.Array  # int32 — active worker slots (n as a grid axis)
+    strag_kinds: jax.Array  # int32 (n_slots,) — per-slot SWEEP_FAMILIES indices
+    strag_p: jax.Array  # f32 (n_slots, N_STRAGGLER_PARAMS) — per-worker params
+    sched_mode: jax.Array  # int32 — straggler.SCHEDULE_MODES
+    sched_leaf: jax.Array  # int32 — which parameter column drifts
+    sched_times: jax.Array  # f32 (K,) — rate-schedule knots, +inf padded
+    sched_scales: jax.Array  # f32 (K,) — knot multipliers, last-value padded
+    sketch_signs: Any  # params-shaped pytree — sketched_pflug Rademacher signs
     comm_alpha: jax.Array  # f32
     comm_beta: jax.Array  # f32
     eta: jax.Array  # f32
@@ -147,6 +176,7 @@ class _CtrlState(NamedTuple):
     count_negative: jax.Array
     count_iter: jax.Array
     prev_grad: Any  # pytree — Pflug's g_{j-1}
+    prev_sketch: jax.Array  # f32 (sketch_dim,) — sketched Pflug's z_{j-1}
     ema_mean: Any  # pytree — variance_ratio's EMA(g)
     ema_sq: jax.Array
     have_prev: jax.Array
@@ -176,7 +206,37 @@ def summarize_cells(result: SweepResult) -> dict:
     }
 
 
-def _cell_of(case: SweepCase, n_workers: int, n_slots: int) -> _CellParams:
+def _sketch_signs_of(params_like, seed: int, sketch_dim: int):
+    """Host-side precompute of SketchedPflugController._sketch's Rademacher
+    signs: the same crc32(key-path)-derived leaf seeds and the same
+    ``jax.random.rademacher`` draw, materialized once per cell as a
+    params-shaped pytree of f32 constants (the grid's static sketch
+    layout).  The in-graph branch multiplies these exactly as the class
+    multiplies its on-the-fly signs, so sketched cells stay bitwise-equal
+    to the looped engine."""
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(params_like)
+    out = []
+    for path, g in leaves:
+        digest = zlib.crc32(jax.tree_util.keystr(path).encode("utf-8"))
+        key = jax.random.PRNGKey(seed + (digest % (2**30)))
+        out.append(np.asarray(
+            jax.random.rademacher(key, np.shape(g), dtype=jnp.float32)
+        ))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _zero_signs_of(params_like):
+    return jax.tree.map(lambda g: np.zeros(np.shape(g), np.float32), params_like)
+
+
+def _cell_of(
+    case: SweepCase,
+    n_slots: int,
+    n_switch_slots: int,
+    n_sched_slots: int,
+    sketch_dim: int,
+    params_like,
+) -> _CellParams:
     c = case.controller
     kind = _CTRL_KINDS.get(type(c))
     if kind is None:
@@ -185,25 +245,48 @@ def _cell_of(case: SweepCase, n_workers: int, n_slots: int) -> _CellParams:
             f"{[t.__name__ for t in _CTRL_KINDS]}"
         )
     i32, f32 = np.int32, np.float32
+    n_active = int(c.n_workers)
+    if n_active > n_slots:
+        raise ValueError(
+            f"cell {case.name()!r}: controller n_workers={n_active} exceeds "
+            f"the grid's n_slots={n_slots}"
+        )
+    if isinstance(case.straggler, WorkerFleet) and case.straggler.n_active != n_active:
+        raise ValueError(
+            f"cell {case.name()!r}: fleet has {case.straggler.n_active} models "
+            f"but controller.n_workers={n_active}"
+        )
     k0, step, thresh, burnin = 1, 0, 0, 0
-    k_max = n_workers
+    k_max = n_active
     decay = ratio_thresh = 0.0
-    times = np.full((n_slots,), np.inf, f32)
+    times = np.full((n_switch_slots,), np.inf, f32)
+    signs = _zero_signs_of(params_like)
     if kind == _FIXED:
         k0 = c.k
-    elif kind == _PFLUG:
+    elif kind in (_PFLUG, _SKETCHED_PFLUG):
         k0, step, thresh, burnin = c.k0, c.step, c.thresh, c.burnin
-        k_max = c.k_max if c.k_max is not None else n_workers
+        k_max = c.k_max if c.k_max is not None else n_active
+        if kind == _SKETCHED_PFLUG:
+            if c.sketch_dim != sketch_dim:
+                raise ValueError(
+                    f"cell {case.name()!r}: sketch_dim={c.sketch_dim} but the "
+                    f"grid's static sketch layout is {sketch_dim} (every "
+                    "sketched cell in one sweep must share sketch_dim)"
+                )
+            signs = _sketch_signs_of(params_like, c.seed, sketch_dim)
     elif kind == _SCHEDULE:
         k0, step = c.k0, c.step
         st = np.asarray(list(c.switch_times), f32)
-        if st.size > n_slots:
-            raise ValueError(f"{st.size} switch times > {n_slots} slots")
+        if st.size > n_switch_slots:
+            raise ValueError(f"{st.size} switch times > {n_switch_slots} slots")
         times[: st.size] = st
     elif kind == _VARIANCE_RATIO:
         k0, step, burnin = c.k0, c.step, c.burnin
-        k_max = c.k_max if c.k_max is not None else n_workers
+        k_max = c.k_max if c.k_max is not None else n_active
         decay, ratio_thresh = c.decay, c.ratio_thresh
+    pmat, kinds, _ = pack_params_per_worker(case.straggler, n_slots, n_active=n_active)
+    sched = case.straggler.schedule if isinstance(case.straggler, WorkerFleet) else None
+    sched_mode, sched_leaf, sched_times, sched_scales = pack_schedule(sched, n_sched_slots)
     comm = case.comm or aggregation.CommModel()
     return _CellParams(
         ctrl_kind=i32(kind),
@@ -218,8 +301,14 @@ def _cell_of(case: SweepCase, n_workers: int, n_slots: int) -> _CellParams:
         one_minus_decay=f32(1.0 - decay),
         ratio_thresh=f32(ratio_thresh),
         switch_times=times,
-        strag_kind=i32(family_index(case.straggler)),
-        strag_p=pack_params(case.straggler),
+        n_active=i32(n_active),
+        strag_kinds=kinds,
+        strag_p=pmat,
+        sched_mode=sched_mode,
+        sched_leaf=sched_leaf,
+        sched_times=sched_times,
+        sched_scales=sched_scales,
+        sketch_signs=signs,
         comm_alpha=f32(comm.alpha),
         comm_beta=f32(comm.beta),
         eta=f32(case.eta),
@@ -229,13 +318,14 @@ def _cell_of(case: SweepCase, n_workers: int, n_slots: int) -> _CellParams:
 # ------------------------------------------------- unified controller update
 
 
-def _ctrl_init(cp: _CellParams, params_like) -> _CtrlState:
+def _ctrl_init(cp: _CellParams, params_like, sketch_dim: int) -> _CtrlState:
     return _CtrlState(
         k=jnp.asarray(cp.k0, jnp.int32),
         count_negative=jnp.asarray(0, jnp.int32),
         # Pflug starts its iteration counter at 1, variance_ratio at 0.
         count_iter=jnp.where(cp.ctrl_kind == _VARIANCE_RATIO, 0, 1).astype(jnp.int32),
         prev_grad=_tree_zeros_like(params_like),
+        prev_sketch=jnp.zeros((sketch_dim,), jnp.float32),
         ema_mean=_tree_zeros_like(params_like),
         ema_sq=jnp.asarray(0.0, jnp.float32),
         have_prev=jnp.asarray(False),
@@ -243,13 +333,13 @@ def _ctrl_init(cp: _CellParams, params_like) -> _CtrlState:
     )
 
 
-def _branch_fixed(cp, state, grads, sim_time, n_workers):
-    del cp, grads, sim_time, n_workers
+def _branch_fixed(cp, state, grads, sim_time):
+    del cp, grads, sim_time
     return state, state.k
 
 
-def _branch_pflug(cp, state, grads, sim_time, n_workers):
-    del sim_time, n_workers
+def _branch_pflug(cp, state, grads, sim_time):
+    del sim_time
     dot = _tree_dot(grads, state.prev_grad)
     delta = jnp.where(state.have_prev, jnp.where(dot < 0, 1, -1), 0).astype(jnp.int32)
     count_neg = state.count_negative + delta
@@ -272,15 +362,17 @@ def _branch_pflug(cp, state, grads, sim_time, n_workers):
     return new_state, new_k
 
 
-def _branch_schedule(cp, state, grads, sim_time, n_workers):
+def _branch_schedule(cp, state, grads, sim_time):
     del grads
     n_passed = jnp.sum(sim_time >= cp.switch_times).astype(jnp.int32)
-    k = jnp.minimum(cp.k0 + cp.step * n_passed, n_workers)
+    # Cap at the cell's ACTIVE worker count — with n as a grid axis the
+    # class-side cap (ScheduleController.n_workers) is a per-cell value.
+    k = jnp.minimum(cp.k0 + cp.step * n_passed, cp.n_active)
     return state._replace(k=k), k
 
 
-def _branch_variance_ratio(cp, state, grads, sim_time, n_workers):
-    del sim_time, n_workers
+def _branch_variance_ratio(cp, state, grads, sim_time):
+    del sim_time
     d, omd = cp.decay, cp.one_minus_decay
     ema_mean = jax.tree.map(
         lambda m, g: d * m + omd * g.astype(jnp.float32), state.ema_mean, grads
@@ -311,22 +403,59 @@ def _branch_variance_ratio(cp, state, grads, sim_time, n_workers):
     return new_state, new_k
 
 
-_CTRL_BRANCHES = (_branch_fixed, _branch_pflug, _branch_schedule, _branch_variance_ratio)
+def _apply_sketch(signs, grads, sketch_dim: int) -> jax.Array:
+    """Count-sketch of the gradient from precomputed per-cell sign leaves —
+    arithmetic-identical to SketchedPflugController._sketch (same leaf
+    order, same pad/reshape/bucket-sum, same accumulation order), with the
+    on-the-fly Rademacher draw replaced by the cell's traced constants."""
+    m = sketch_dim
+    z = jnp.zeros((m,), jnp.float32)
+    for sl, g in zip(jax.tree.leaves(signs), jax.tree.leaves(grads)):
+        t = (sl * g.astype(jnp.float32)).reshape(-1)
+        pad = (-t.size) % m
+        if pad:
+            t = jnp.pad(t, (0, pad))
+        z = z + t.reshape(-1, m).sum(axis=0)
+    return z
 
 
-def _ctrl_update(cp: _CellParams, state, grads, sim_time, n_workers: int):
-    branches = [
-        lambda cp, s, g, t, _b=b: _b(cp, s, g, t, n_workers) for b in _CTRL_BRANCHES
-    ]
+def _make_branch_sketched_pflug(sketch_dim: int):
+    def _branch_sketched_pflug(cp, state, grads, sim_time):
+        del sim_time
+        z = _apply_sketch(cp.sketch_signs, grads, sketch_dim)
+        dot = jnp.dot(z, state.prev_sketch)
+        delta = jnp.where(state.have_prev, jnp.where(dot < 0, 1, -1), 0).astype(jnp.int32)
+        count_neg = state.count_negative + delta
+        do_switch = (
+            (count_neg > cp.thresh)
+            & (state.count_iter > cp.burnin)
+            & (state.k + cp.step <= cp.k_max)
+        )
+        new_k = jnp.where(do_switch, state.k + cp.step, state.k)
+        count_neg = jnp.where(do_switch, 0, count_neg)
+        count_iter = jnp.where(do_switch, 0, state.count_iter) + 1
+        new_state = state._replace(
+            k=new_k,
+            count_negative=count_neg,
+            count_iter=count_iter,
+            prev_sketch=z,
+            have_prev=jnp.asarray(True),
+            n_switches=state.n_switches + do_switch.astype(jnp.int32),
+        )
+        return new_state, new_k
+
+    return _branch_sketched_pflug
+
+
+def _ctrl_update(cp: _CellParams, state, grads, sim_time, sketch_dim: int):
+    branches = (
+        _branch_fixed,
+        _branch_pflug,
+        _branch_schedule,
+        _branch_variance_ratio,
+        _make_branch_sketched_pflug(sketch_dim),
+    )
     return jax.lax.switch(cp.ctrl_kind, branches, cp, state, grads, sim_time)
-
-
-def _sample_times(strag_kind, strag_p, key, n_workers: int):
-    branches = [
-        lambda key, p, _c=cls: _c._sample_packed(key, n_workers, p)
-        for cls in SWEEP_FAMILIES
-    ]
-    return jax.lax.switch(strag_kind, branches, key, strag_p)
 
 
 # ---------------------------------------------------------------- the engine
@@ -339,9 +468,9 @@ class _SweepCarry(NamedTuple):
     key: jax.Array
 
 
-# (loss_fn, n_workers, num_iters, eval_every, unroll, n_slots, partition,
-#  ndev) -> jitted flat program.  Jit's own cache handles shapes (grid size,
-# params/X/y shapes) under each entry.
+# (loss_fn, n_workers, num_iters, eval_every, unroll, n_switch_slots,
+#  n_sched_slots, sketch_dim, partition, ndev) -> jitted flat program.  Jit's
+# own cache handles shapes (grid size, params/X/y shapes) under each entry.
 _PROGRAM_CACHE: dict = {}
 _N_TRACES = 0
 
@@ -362,6 +491,7 @@ def _build_flat_program(
     num_iters: int,
     eval_every: int,
     unroll: int,
+    sketch_dim: int,
     partition: str,
     mesh: Mesh | None,
 ):
@@ -378,31 +508,40 @@ def _build_flat_program(
 
         grad_fn = jax.grad(step_loss)
 
-        def mean_loss(params):
-            return jnp.mean(per_example_loss_fn(params, X, y))
+        def mean_loss(params, n_active):
+            losses = per_example_loss_fn(params, X, y)
+            return aggregation.active_worker_mean_loss(losses, n_active, n_workers, s)
 
         def run_one(cp: _CellParams, replica_key):
             def one_step(carry: _SweepCarry, _):
                 new_key, sub = jax.random.split(carry.key)
                 k = carry.ctrl_state.k
-                times = _sample_times(cp.strag_kind, cp.strag_p, sub, n_workers)
+                pm = apply_rate_schedule(
+                    cp.strag_p, cp.sched_mode, cp.sched_leaf,
+                    cp.sched_times, cp.sched_scales, carry.sim_time,
+                )
+                times = sample_times_per_worker(cp.strag_kinds, pm, sub)
                 mask, t_iter = aggregation.fastest_k_mask_time(times, k)
                 t_iter = t_iter + (cp.comm_alpha + cp.comm_beta * k.astype(jnp.float32))
                 g = grad_fn(carry.params, mask, k)
                 params = jax.tree.map(lambda p, gi: p - cp.eta * gi, carry.params, g)
                 sim_time = carry.sim_time + t_iter
-                ctrl_state, _ = _ctrl_update(cp, carry.ctrl_state, g, sim_time, n_workers)
+                ctrl_state, _ = _ctrl_update(
+                    cp, carry.ctrl_state, g, sim_time, sketch_dim
+                )
                 return _SweepCarry(params, ctrl_state, sim_time, new_key), k
 
             def eval_block(carry: _SweepCarry, length: int):
                 carry, ks = jax.lax.scan(
                     one_step, carry, None, length=length, unroll=min(unroll, length)
                 )
-                return carry, (carry.sim_time, mean_loss(carry.params), ks[-1])
+                return carry, (
+                    carry.sim_time, mean_loss(carry.params, cp.n_active), ks[-1]
+                )
 
             carry = _SweepCarry(
                 params=params0,
-                ctrl_state=_ctrl_init(cp, params0),
+                ctrl_state=_ctrl_init(cp, params0, sketch_dim),
                 sim_time=jnp.asarray(0.0, jnp.float32),
                 key=replica_key,
             )
@@ -465,9 +604,17 @@ def run_sweep(
     eval_every: int = 10,
     unroll: int = 4,
     n_switch_slots: int | None = None,
+    n_sched_slots: int | None = None,
     partition: str = "auto",
 ) -> SweepResult:
     """Run a G-cell x R-replica grid of fastest-k SGD as ONE jitted dispatch.
+
+    ``n_workers`` is the grid's **slot count**: every cell is padded to it,
+    and a cell's *active* worker count is its ``controller.n_workers``
+    (slots past it sample +inf response times and their data shards are
+    held out of the gradient and the eval loss) — so n itself is an
+    ordinary grid axis.  Cells whose controllers all use the full slot
+    count reproduce the pre-heterogeneity engine bit for bit.
 
     The default ``unroll`` is lower than ``run_monte_carlo``'s 8: the grid
     axis already saturates the vector units, so deeper unrolling buys no
@@ -526,8 +673,33 @@ def run_sweep(
                 if isinstance(c.controller, ScheduleController)
             ]
         )
+    if n_sched_slots is None:
+        n_sched_slots = max(
+            [1]
+            + [
+                len(c.straggler.schedule.times)
+                for c in cases
+                if isinstance(c.straggler, WorkerFleet) and c.straggler.schedule
+            ]
+        )
+    # The grid's static sketch layout: every sketched cell must share one
+    # sketch_dim (it is the prev_sketch carry shape, baked into the trace).
+    sketch_dims = {
+        c.controller.sketch_dim
+        for c in cases
+        if isinstance(c.controller, SketchedPflugController)
+    }
+    if len(sketch_dims) > 1:
+        raise ValueError(
+            f"sketched cells disagree on sketch_dim ({sorted(sketch_dims)}); "
+            "one sweep supports a single static sketch layout"
+        )
+    sketch_dim = sketch_dims.pop() if sketch_dims else 1
     G, R = len(cases), keys.shape[0]
-    cells_np = [_cell_of(c, n_workers, n_switch_slots) for c in cases]
+    cells_np = [
+        _cell_of(c, n_workers, n_switch_slots, n_sched_slots, sketch_dim, params0)
+        for c in cases
+    ]
     stacked = jax.tree.map(lambda *xs: np.stack(xs), *cells_np)
 
     devices = jax.local_devices()
@@ -559,6 +731,8 @@ def run_sweep(
         int(eval_every),
         int(unroll),
         int(n_switch_slots),
+        int(n_sched_slots),
+        int(sketch_dim),
         partition,
         ndev,
     )
@@ -566,7 +740,7 @@ def run_sweep(
     if program is None:
         program = _build_flat_program(
             per_example_loss_fn, n_workers, num_iters, eval_every, unroll,
-            partition, mesh,
+            sketch_dim, partition, mesh,
         )
         _PROGRAM_CACHE[cache_key] = program
     times, losses, ks = program(params0, X, y, flat_cells, flat_keys)

@@ -3,6 +3,15 @@
 
 All of this is host-side numpy: it is the *policy design* layer, consumed by
 `ScheduleController` and by `benchmarks/fig1.py`.
+
+Heterogeneous fleets: the paper's mu_k = E[X_(k)] assumes n iid workers, but
+Theorem 1 only needs the order-statistic moments themselves — so
+``hetero_order_stat_moments`` computes them **exactly** for independent
+non-identically-distributed workers (``straggler.WorkerFleet``) by
+integrating the Poisson-binomial count recurrence over the per-worker CDFs,
+and ``SGDSystem``/``switching_times`` work unchanged (the fleet's
+``mean_order_statistic`` dispatches here).  An iid fleet reduces to the
+existing closed forms / Beta quadrature within quadrature tolerance.
 """
 
 from __future__ import annotations
@@ -14,7 +23,56 @@ import numpy as np
 
 from repro.core.straggler import StragglerModel, Exponential
 
-__all__ = ["SGDSystem", "error_bound", "switching_times", "adaptive_bound_curve"]
+__all__ = [
+    "SGDSystem",
+    "error_bound",
+    "switching_times",
+    "adaptive_bound_curve",
+    "hetero_order_stat_moments",
+]
+
+
+def hetero_order_stat_moments(
+    models: Sequence[StragglerModel], k: int, num: int = 4001, tail: float = 1e-7
+):
+    """(E[X_(k)], E[X_(k)^2]) for independent, non-identical worker times.
+
+    With X_i ~ F_i independent, the k-th order statistic's CDF is the
+    Poisson-binomial tail  F_(k)(t) = P(#{i: X_i <= t} >= k), evaluated by
+    the O(n^2) count recurrence at every quadrature node; the moments follow
+    from the survival-function identities for non-negative variables,
+
+        E[X_(k)]   = int_0^inf (1 - F_(k)(t)) dt,
+        E[X_(k)^2] = int_0^inf 2 t (1 - F_(k)(t)) dt,
+
+    on a grid that is linear through the bulk and log-spaced into the tail
+    (heavy-tailed fleets concentrate their k=n mass far out).  For n iid
+    models this is the same quantity the Beta-quadrature default computes.
+    Second moments require every model's tail to have finite variance
+    (e.g. Pareto needs alpha > 2) — the integral is truncated at the
+    (1 - tail) quantile either way.
+    """
+    n = len(models)
+    if not 1 <= k <= n:
+        raise ValueError(f"k={k} outside 1..{n}")
+    hi = max(float(np.max(m.quantile(np.asarray([1.0 - tail])))) for m in models)
+    mid = max(float(np.max(m.quantile(np.asarray([0.95])))) for m in models)
+    mid = min(max(mid, 1e-12), hi)
+    grid = np.concatenate([np.linspace(0.0, mid, num)[:-1],
+                           np.geomspace(max(mid, 1e-12), max(hi, 1e-12), num)])
+    grid = np.unique(grid)
+    # Poisson-binomial recurrence, vectorized over the grid: c[j] = P(count=j).
+    c = np.zeros((n + 1, grid.size))
+    c[0] = 1.0
+    for i, m in enumerate(models):
+        fi = np.clip(np.asarray(m.cdf(grid), np.float64), 0.0, 1.0)
+        for j in range(i + 1, 0, -1):
+            c[j] = c[j] * (1.0 - fi) + c[j - 1] * fi
+        c[0] = c[0] * (1.0 - fi)
+    surv = 1.0 - np.sum(c[k:], axis=0)  # P(X_(k) > t)
+    m1 = np.trapezoid(surv, grid)
+    m2 = np.trapezoid(2.0 * grid * surv, grid)
+    return float(m1), float(m2)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -27,7 +85,10 @@ class SGDSystem:
     s:      samples per worker (= m/n)
     F0_gap: F(w_0) − F*
     n:      number of workers
-    straggler: response-time model (gives mu_k = E[X_(k)])
+    straggler: response-time model (gives mu_k = E[X_(k)]); a heterogeneous
+        ``straggler.WorkerFleet`` with n active models works too — its order
+        statistics come from ``hetero_order_stat_moments``, so Theorem-1
+        switch times remain available on non-iid fleets.
     """
 
     eta: float

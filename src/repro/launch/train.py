@@ -41,25 +41,80 @@ from repro.optim import get_optimizer
 from repro.shardctx import activation_sharding
 
 
+def _parse_pair(spec, flag, cast=float):
+    try:
+        a, b = spec.split(":")
+        return cast(a), cast(b)
+    except ValueError:
+        raise SystemExit(f"{flag} expects 'A:B', got {spec!r}")
+
+
 def _run_simulation(args):
-    """The train CLI's simulation entry: a grid sweep as one dispatch."""
+    """The train CLI's simulation entry: a grid sweep as one dispatch.
+
+    ``--sim-n-grid`` makes the worker count an ordinary grid axis (cells are
+    padded to the largest n; smaller-n cells hold the extra slots inactive).
+    ``--sim-hetero FRAC:FACTOR`` swaps the straggler axis for a two-speed
+    exponential fleet — a FRAC fraction of each cell's workers is FACTOR x
+    slower — and ``--sim-drift T:SCALE`` adds a fleet-wide mid-run rate
+    drift (every rate is multiplied by SCALE at simulated time T).
+    """
+    from repro.core.straggler import Exponential, RateSchedule, WorkerFleet
     from repro.core.sweep import SweepCase, run_sweep, summarize_cells
     from repro.data import make_linreg_data
 
-    n, m, d = args.n_workers, args.sim_m, args.sim_d
-    if m % n:
-        raise SystemExit(f"--sim-m {m} must be divisible by --n-workers {n}")
+    m, d = args.sim_m, args.sim_d
+    if args.sim_n_grid:
+        n_values = sorted({int(v) for v in args.sim_n_grid.split(",") if v})
+    else:
+        n_values = [args.n_workers]
+    n_slots = max(n_values)
+    if m % n_slots:
+        raise SystemExit(f"--sim-m {m} must be divisible by the largest n "
+                         f"({n_slots})")
     data = make_linreg_data(jax.random.PRNGKey(args.seed), m=m, d=d)
     L = 2 * float(jnp.linalg.eigvalsh(data.X.T @ data.X / m).max())
     eta = 0.5 / L
-    straggler_names = [s for s in args.sim_stragglers.split(",") if s]
     ctrl_names = [c for c in args.sim_controllers.split(",") if c]
 
-    def make_controller(name, straggler):
+    drift = None
+    if args.sim_drift:
+        t_drift, scale = _parse_pair(args.sim_drift, "--sim-drift")
+        drift = RateSchedule(times=(t_drift,), scales=(scale,))
+
+    def stragglers_for(n):
+        """{label: straggler spec} for an n-active-worker cell."""
+        if args.sim_hetero:
+            frac, factor = _parse_pair(args.sim_hetero, "--sim-hetero")
+            if not 0.0 <= frac <= 1.0 or factor <= 0:
+                raise SystemExit(f"--sim-hetero: bad FRAC:FACTOR {args.sim_hetero!r}")
+            n_slow = int(round(frac * n))
+            fleet = WorkerFleet(
+                models=(Exponential(rate=1.0),) * (n - n_slow)
+                + (Exponential(rate=1.0 / factor),) * n_slow,
+                schedule=drift,
+            )
+            return {f"two_speed{args.sim_hetero}": fleet}
+        out = {}
+        for sname in (s for s in args.sim_stragglers.split(",") if s):
+            model = get_straggler_model(sname)
+            if drift is not None:
+                out[sname] = WorkerFleet(models=(model,) * n, schedule=drift)
+            else:
+                out[sname] = model
+        return out
+
+    def make_controller(name, straggler, n):
         if name == "pflug":
             return get_controller("pflug", n, k0=args.k0, step=args.k_step,
                                   thresh=args.thresh, burnin=args.burnin)
+        if name == "sketched_pflug":
+            return get_controller("sketched_pflug", n, k0=args.k0,
+                                  step=args.k_step, thresh=args.thresh,
+                                  burnin=args.burnin, sketch_dim=args.sketch_dim)
         if name == "fixed":
+            if args.fixed_k > n:
+                raise SystemExit(f"--fixed-k {args.fixed_k} > n={n}")
             return get_controller("fixed", n, k=args.fixed_k)
         if name == "variance_ratio":
             return get_controller("variance_ratio", n, k0=args.k0,
@@ -68,7 +123,8 @@ def _run_simulation(args):
             sysm = theory.SGDSystem(
                 eta=eta, L=args.schedule_smoothness,
                 c=args.schedule_strong_convexity, sigma2=args.schedule_sigma2,
-                s=m // n, F0_gap=args.schedule_f0_gap, n=n, straggler=straggler,
+                s=m // n_slots, F0_gap=args.schedule_f0_gap, n=n,
+                straggler=straggler,
             )
             times = theory.switching_times(
                 sysm, list(range(args.k0, n, args.k_step)), step=args.k_step)
@@ -77,17 +133,18 @@ def _run_simulation(args):
         raise SystemExit(f"--sim-controllers: unknown controller {name!r}")
 
     comm = CommModel(alpha=args.comm_alpha, beta=args.comm_beta)
+    n_tag = lambda n: f"|n{n}" if len(n_values) > 1 else ""
     cases = [
-        SweepCase(make_controller(cname, get_straggler_model(sname)),
-                  get_straggler_model(sname), eta=eta, comm=comm,
-                  label=f"{cname}|{sname}")
-        for sname in straggler_names
+        SweepCase(make_controller(cname, strag, n), strag, eta=eta, comm=comm,
+                  label=f"{cname}|{sname}{n_tag(n)}")
+        for n in n_values
+        for sname, strag in stragglers_for(n).items()
         for cname in ctrl_names
     ]
     t0 = time.time()
     stats = summarize_cells(run_sweep(
         (lambda w, X, y: (X @ w - y) ** 2),
-        jnp.zeros((d,)), data.X, data.y, n_workers=n, cases=cases,
+        jnp.zeros((d,)), data.X, data.y, n_workers=n_slots, cases=cases,
         num_iters=args.steps, key=jax.random.PRNGKey(args.seed + 1),
         n_replicas=args.replicas, eval_every=args.sim_eval_every,
     ))
@@ -164,9 +221,22 @@ def main(argv=None):
                          "paper's synthetic linreg task (one compiled dispatch "
                          "via repro.core.sweep) instead of LM training")
     ap.add_argument("--sim-controllers", default="pflug,fixed",
-                    help="comma list from {pflug,fixed,schedule,variance_ratio}")
+                    help="comma list from {pflug,sketched_pflug,fixed,"
+                         "schedule,variance_ratio}")
     ap.add_argument("--sim-stragglers", default="exponential,pareto",
                     help="comma list of registered straggler models")
+    ap.add_argument("--sim-hetero", default=None, metavar="FRAC:FACTOR",
+                    help="simulate: replace the straggler axis with a "
+                         "two-speed exponential fleet — FRAC of each cell's "
+                         "workers run FACTOR x slower (e.g. 0.3:4)")
+    ap.add_argument("--sim-drift", default=None, metavar="T:SCALE",
+                    help="simulate: fleet-wide rate drift — multiply every "
+                         "worker's rate by SCALE at simulated time T "
+                         "(e.g. 500:0.4)")
+    ap.add_argument("--sim-n-grid", default=None, metavar="N1,N2,...",
+                    help="simulate: sweep the worker count as a grid axis; "
+                         "cells are padded to the largest n (overrides "
+                         "--n-workers)")
     ap.add_argument("--replicas", type=int, default=16,
                     help="simulate: Monte-Carlo replicas per grid cell")
     ap.add_argument("--sim-m", type=int, default=400,

@@ -58,8 +58,21 @@ def test_dryrun_long_context_ssm():
 
 
 @pytest.mark.slow
+@pytest.mark.skipif(
+    os.environ.get("REPRO_BIG_HOST") != "1",
+    reason="340B-scale SPMD partitioning reliably SEGFAULTS XLA's partitioner "
+           "on small CPU hosts (not a repo bug); set REPRO_BIG_HOST=1 on a "
+           "host with the memory/devices to lower nemotron-4-340b",
+)
 def test_dryrun_optimized_nemotron_fits():
-    """The §Perf pair-2 configuration must keep fitting 16 GB."""
+    """The §Perf pair-2 configuration must keep fitting 16 GB.
+
+    Gated behind REPRO_BIG_HOST=1: letting the subprocess segfault and then
+    skipping on the signal (the old behaviour) still burned minutes of XLA
+    partitioning work per run and left core files behind on some hosts.
+    ``skip_on_signal`` stays as a second line of defence for big hosts that
+    are still too small.
+    """
     out = _run_dryrun(
         "--arch", "nemotron-4-340b", "--shape", "train_4k",
         "--override", 'controller="sketched"',
@@ -67,7 +80,6 @@ def test_dryrun_optimized_nemotron_fits():
         "--override", "seq_parallel=true",
         "--override", 'moments_dtype="bfloat16"',
         timeout=1800,
-        # 340B-scale SPMD partitioning is known to crash XLA on small hosts
         skip_on_signal=True,
     )
     assert out["analytic_memory"]["fits_16gb"], out["analytic_memory"]

@@ -139,11 +139,15 @@ def test_sweep_rejects_duplicate_labels(linreg):
 
 
 def test_sweep_rejects_unsupported_controller(linreg):
+    # SketchedPflugController joined the sweep superset (tests/test_hetero.py
+    # pins its cells bitwise) — only genuinely unknown controllers reject now.
+    class FrankenController:
+        n_workers = N
+
     data, eta = linreg
     with pytest.raises(ValueError, match="not sweepable"):
         run_sweep(_loss, jnp.zeros((D,)), data.X, data.y, n_workers=N,
-                  cases=[SweepCase(SketchedPflugController(n_workers=N),
-                                   Exponential(), eta)],
+                  cases=[SweepCase(FrankenController(), Exponential(), eta)],
                   num_iters=10, key=jax.random.PRNGKey(0), n_replicas=2)
 
 
