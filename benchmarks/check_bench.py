@@ -2,10 +2,16 @@
 committed baseline (``BENCH_sweep.json`` at the repo root).
 
     python benchmarks/check_bench.py CURRENT BASELINE [--max-ratio 1.5]
+                                     [--min-async-speedup 5.0]
 
 The comparison is on the **warm** single-dispatch time (``sweep_s.warm``) —
 the number a hot-path or program-cache regression moves first (a
 retrace-per-call bug turns warm into cold, a 2-10x jump).
+
+The record's ``async`` section (jitted K-async engine vs the event-driven
+host loop, per update) is gated absolutely: ``speedup_per_update`` below
+``--min-async-speedup`` (default 5x) fails — the jitted renewal engine
+regressing to host-loop-like throughput means its scan hot path broke.
 
 * Same-shape records (equal smoke flag / n_cells / num_iters / n_replicas):
   direct ratio, fail above ``--max-ratio``.
@@ -33,7 +39,10 @@ def _shape(rec: dict) -> tuple:
     )
 
 
-def check(current: dict, baseline: dict, max_ratio: float) -> str | None:
+def check(
+    current: dict, baseline: dict, max_ratio: float,
+    min_async_speedup: float = 5.0,
+) -> str | None:
     """Returns an error message, or None when the current record passes."""
     cur_warm = current["sweep_s"]["warm"]
     base_warm = baseline["sweep_s"]["warm"]
@@ -51,9 +60,23 @@ def check(current: dict, baseline: dict, max_ratio: float) -> str | None:
         )
     if not current.get("bitwise_equal", False):
         return "current record reports bitwise_equal=false vs the looped engine"
+    async_rec = current.get("async")
+    if async_rec is None:
+        return "current record has no 'async' section (engine-vs-host-loop)"
+    async_speedup = async_rec.get("speedup_per_update", 0.0)
+    if async_speedup < min_async_speedup:
+        return (
+            f"jitted async engine only {async_speedup:.1f}x the host loop "
+            f"per update (floor {min_async_speedup}x): "
+            f"engine_warm={async_rec.get('engine_warm_s')}s for "
+            f"{async_rec.get('updates')}x{async_rec.get('replicas')} updates "
+            f"vs host {async_rec.get('host_s')}s for "
+            f"{async_rec.get('host_updates')}"
+        )
     print(
         f"check_bench OK: warm {cur_warm:.3f}s vs baseline {base_warm:.3f}s "
-        f"({ratio:.2f}x, {kind}, limit {max_ratio}x)"
+        f"({ratio:.2f}x, {kind}, limit {max_ratio}x); async engine "
+        f"{async_speedup:.0f}x host loop (floor {min_async_speedup}x)"
     )
     return None
 
@@ -63,12 +86,15 @@ def main():
     ap.add_argument("current", help="freshly produced BENCH_sweep.json")
     ap.add_argument("baseline", help="committed baseline BENCH_sweep.json")
     ap.add_argument("--max-ratio", type=float, default=1.5)
+    ap.add_argument("--min-async-speedup", type=float, default=5.0,
+                    help="floor on async.speedup_per_update (engine vs "
+                         "host loop); absolute, not baseline-relative")
     args = ap.parse_args()
     with open(args.current) as f:
         current = json.load(f)
     with open(args.baseline) as f:
         baseline = json.load(f)
-    err = check(current, baseline, args.max_ratio)
+    err = check(current, baseline, args.max_ratio, args.min_async_speedup)
     if err:
         print(f"check_bench FAIL: {err}", file=sys.stderr)
         sys.exit(1)

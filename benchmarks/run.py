@@ -14,6 +14,7 @@ from benchmarks import (  # noqa: E402
     fig1,
     fig2,
     fig3,
+    fig_async,
     fig_hetero,
     kernels_bench,
     roofline_table,
@@ -29,6 +30,10 @@ def main() -> None:
         ("fig2", lambda: [fig2.run("results/fig2.csv")]),
         ("fig3", lambda: [fig3.run("results/fig3.csv")]),
         ("fig_hetero", lambda: [fig_hetero.run("results/fig_hetero.csv")]),
+        # bench_iters=None: the sweep entry below already measures the
+        # gated engine-vs-host number at this config
+        ("fig_async", lambda: [fig_async.run("results/fig_async.csv",
+                                             bench_iters=None)]),
         ("ablation", lambda: [ablation.run("results/ablation.csv")]),
         ("sweep", lambda: [sweep_bench.run("results/BENCH_sweep.json")]),
         ("kernels", kernels_bench.run),

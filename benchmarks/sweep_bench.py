@@ -11,6 +11,12 @@ still G dispatches); the sweep engine replaces both with a single
 grid-composition-agnostic program.  Both cold and warm are recorded;
 ``speedup`` refers to old-vs-new, i.e. cold-vs-cold.
 
+The record also carries an ``async`` section: warm per-update throughput of
+the jitted fully-async engine (``run_monte_carlo(mode="kasync")`` at K=1)
+against the event-driven host-loop reference (``async_sim``) on the same
+problem — the number ``check_bench.py`` gates at >= 5x alongside the warm
+sweep-time rule.
+
     PYTHONPATH=src python benchmarks/sweep_bench.py [--smoke] [--out PATH]
 """
 
@@ -23,7 +29,9 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core.async_sim import simulate_async_sgd
 from repro.core.controller import (
     FixedKController,
     PflugController,
@@ -79,6 +87,72 @@ def _build_grid(data, eta, smoke: bool):
     ]
 
 
+def async_engine_vs_host(iters: int, replicas: int, seed: int = 0) -> dict:
+    """Warm per-update throughput: jitted fully-async engine vs host loop.
+
+    Runs ``run_monte_carlo(mode="kasync")`` at K=1 (cold to compile, then
+    warm timed) for ``iters`` master updates x ``replicas`` replicas, then
+    the event-driven ``simulate_async_sgd`` host loop for one seed over the
+    same simulated horizon — the *same* stochastic process, so the host
+    performs ~``iters`` updates.  The reported speedup is per *update*
+    (host seconds/update over warm engine seconds/update/replica): the
+    host's two device syncs per event are the floor the in-graph renewal
+    formulation removes."""
+    data = make_linreg_data(jax.random.PRNGKey(seed), m=M, d=D)
+    L = 2 * float(jnp.linalg.eigvalsh(data.X.T @ data.X / M).max())
+    eta = 0.05 / L  # async-stable at K=1 (see fig3's divergence note)
+    w0 = jnp.zeros((D,))
+    s = M // N
+    keys = jax.random.split(jax.random.PRNGKey(seed + 1), replicas)
+    strag = Exponential(rate=1.0)
+    ctrl = FixedKController(n_workers=N, k=1)
+    eval_every = max(1, iters // 8)
+
+    def engine():
+        r = run_monte_carlo(
+            _loss, w0, data.X, data.y, n_workers=N, controller=ctrl,
+            straggler=strag, eta=eta, num_iters=iters, keys=keys,
+            eval_every=eval_every, mode="kasync")
+        jax.block_until_ready(r.loss)
+        return r
+
+    res = engine()  # cold: compile charged here, not to the warm number
+    t0 = time.perf_counter()
+    res = engine()
+    engine_warm = time.perf_counter() - t0
+    total_time = float(np.mean(np.asarray(res.time)[:, -1]))
+
+    def grad_fn(params, worker):
+        Xi = jax.lax.dynamic_slice_in_dim(data.X, worker * s, s, 0)
+        yi = jax.lax.dynamic_slice_in_dim(data.y, worker * s, s, 0)
+        return jax.grad(lambda p: jnp.mean((Xi @ p - yi) ** 2))(params)
+
+    eval_fn = lambda p: jnp.mean(_loss(p, data.X, data.y))  # noqa: E731
+    # Untimed warmup: grad_fn is jitted per worker index (static_argnums),
+    # so the first pass pays n_workers compiles + the eval compile — charge
+    # neither side's compile to the per-update comparison.
+    simulate_async_sgd(
+        grad_fn, eval_fn, w0, n_workers=N, eta=eta, straggler=strag,
+        total_time=total_time / 10.0, key=jax.random.PRNGKey(seed + 3),
+        eval_every=eval_every)
+    t0 = time.perf_counter()
+    h = simulate_async_sgd(
+        grad_fn, eval_fn, w0, n_workers=N, eta=eta, straggler=strag,
+        total_time=total_time, key=jax.random.PRNGKey(seed + 2),
+        eval_every=eval_every)
+    host_s = time.perf_counter() - t0
+    host_updates = int(h["updates"][-1]) if h["updates"] else 1
+    speedup = (host_s / host_updates) / (engine_warm / (iters * replicas))
+    return {
+        "engine_warm_s": round(engine_warm, 3),
+        "host_s": round(host_s, 3),
+        "updates": iters,
+        "replicas": replicas,
+        "host_updates": host_updates,
+        "speedup_per_update": round(speedup, 1),
+    }
+
+
 def run(out_path: str = "results/BENCH_sweep.json", smoke: bool = False):
     iters = 200 if smoke else ITERS
     replicas = 8 if smoke else REPLICAS
@@ -111,8 +185,9 @@ def run(out_path: str = "results/BENCH_sweep.json", smoke: bool = False):
     clear_sweep_cache()
     t0 = time.perf_counter(); res = sweep(); sweep_cold = time.perf_counter() - t0
     t0 = time.perf_counter(); sweep(); sweep_warm = time.perf_counter() - t0
+    async_rec = async_engine_vs_host(
+        iters=200 if smoke else 2000, replicas=replicas)
 
-    import numpy as np
     bitwise = all(
         np.array_equal(np.asarray(res.time[g]), np.asarray(r.time))
         and np.array_equal(np.asarray(res.loss[g]), np.asarray(r.loss))
@@ -141,6 +216,9 @@ def run(out_path: str = "results/BENCH_sweep.json", smoke: bool = False):
         "speedup": round(looped_cold / sweep_cold, 3),
         "speedup_warm": round(looped_warm / sweep_warm, 3),
         "bitwise_equal": bitwise,
+        # jitted K-async engine vs the event-driven host loop (per update);
+        # check_bench gates speedup_per_update >= 5x.
+        "async": async_rec,
         "backend": jax.default_backend(),
         "n_devices": jax.local_device_count(),
         "jax_version": jax.__version__,
@@ -155,6 +233,7 @@ def run(out_path: str = "results/BENCH_sweep.json", smoke: bool = False):
         "derived": f"cells={len(cases)};replicas={replicas};iters={iters};"
                    f"speedup={record['speedup']:.2f}x;"
                    f"speedup_warm={record['speedup_warm']:.2f}x;"
+                   f"async_speedup={async_rec['speedup_per_update']:.0f}x;"
                    f"bitwise_equal={bitwise}",
     }
 

@@ -9,15 +9,22 @@ Modules:
   controller   — Algorithm-1 Pflug controller, sketched Pflug, fixed-k,
                  Theorem-1 schedule, variance-ratio (beyond paper)
   theory       — Lemma-1 bound, Theorem-1 switching times (Example 1 / Fig 1)
+  execmode     — execution modes: k-sync / K-async / K-batch-async as one
+                 in-graph renewal-process carry (residual clocks, parameter
+                 snapshots, staleness counters); the step functions both
+                 engines share
   montecarlo   — vectorized Monte-Carlo engine: R replicas of the fastest-k
                  simulation as one jitted program (scan over iterations,
-                 vmap over replica seeds, in-graph periodic loss eval)
+                 vmap over replica seeds, in-graph periodic loss eval);
+                 ``run_monte_carlo(mode=...)`` is the per-cell bitwise
+                 ground truth in every execution mode
   sweep        — single-dispatch sweep engine: an entire controller x
-                 straggler x config grid vmapped on top of the replica axis
-                 and sharded across local devices (fig2/fig3/ablation are
-                 each ONE compiled program)
+                 straggler x config x execution-mode grid vmapped on top of
+                 the replica axis and sharded across local devices (fig2/
+                 fig3/ablation/fig_async are each ONE compiled program)
   simulate     — single-trajectory R=1 wrapper over the engine (Figs 2-3)
-  async_sim    — event-driven asynchronous-SGD baseline
+  async_sim    — event-driven asynchronous-SGD host loop: the independent
+                 reference the jitted async modes are validated against
 
 Monte-Carlo engine API (the harness behind every scenario sweep)::
 
@@ -35,8 +42,9 @@ opaque pytree threaded through the scan carry, so new policies need only
 ``init``/``update``.
 """
 
-from repro.core import aggregation, controller, montecarlo, straggler, theory  # noqa: F401
+from repro.core import aggregation, controller, execmode, montecarlo, straggler, theory  # noqa: F401
 from repro.core.aggregation import CommModel, fastest_k_mask, iteration_time  # noqa: F401
+from repro.core.execmode import MODES, ExecStats  # noqa: F401
 from repro.core.controller import (  # noqa: F401
     FixedKController,
     PflugController,

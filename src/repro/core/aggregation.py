@@ -42,6 +42,7 @@ __all__ = [
     "per_example_weights",
     "masked_mean_weights",
     "fastest_k_weighted_loss",
+    "stale_weighted_loss",
     "fastest_k_mask_time",
     "fastest_k_draw",
     "active_worker_mean_loss",
@@ -182,6 +183,24 @@ def fastest_k_weighted_loss(
     s = examples_per_worker
     shard_sums = per_example_losses.reshape(-1, s).sum(axis=1)  # (n,)
     return jnp.dot(shard_sums, mask) / (k.astype(per_example_losses.dtype) * s)
+
+
+def stale_weighted_loss(
+    losses_by_worker: jax.Array, mask: jax.Array, k: jax.Array
+) -> jax.Array:
+    """Eq.-(2)-style weighted loss over *stale* per-worker evaluations.
+
+    ``losses_by_worker`` is (n, s): row i holds worker i's per-example losses
+    evaluated at worker i's OWN parameter snapshot (the dispatch-time model,
+    per the K-async execution modes).  Differentiating wrt the stacked
+    snapshots gives ``mask_i/(k*s) * sum_{a in S_i} grad F(a, w_i)`` per row
+    — each arriving worker's stale partial gradient with the eq.-(2) weight
+    — so the master's update is the row-sum of that gradient stack.  Reuses
+    the segment-sum path (`fastest_k_weighted_loss`): no (m,) weight vector,
+    and for identical snapshots the arithmetic is the sync engine's.
+    """
+    n, s = losses_by_worker.shape
+    return fastest_k_weighted_loss(losses_by_worker.reshape(n * s), mask, k, s)
 
 
 def fastest_k_mask_time(times: jax.Array, k: jax.Array) -> Tuple[jax.Array, jax.Array]:

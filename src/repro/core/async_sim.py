@@ -1,12 +1,24 @@
-"""Event-driven asynchronous distributed SGD baseline (paper §V-C, ref [2]).
+"""Event-driven asynchronous distributed SGD reference (paper §V-C, ref [2]).
 
-Asynchronous SGD breaks SPMD lock-step (each worker updates the master's model
-whenever it finishes, using a gradient computed at *stale* parameters), so it
-cannot be expressed as one XLA program across the mesh.  We implement it the
-way the paper simulates it: an event-driven host loop with a priority queue of
-worker completion events; the gradient math itself is jitted.
+Asynchronous SGD applies each worker's gradient — computed at *stale*
+parameters — as it arrives, via a host loop with a priority queue of worker
+completion events (the gradient math itself is jitted, but every event costs
+a device round-trip).
 
-Used by benchmarks/fig3.py and examples; not part of the pod dry-run.
+Since the execution-mode refactor this host loop is the *validation
+reference*, not the production path: the K-async / K-batch-async family runs
+fully in-graph through ``repro.core.montecarlo.run_monte_carlo(mode=...)``
+and the sweep engine's ``SweepCase(mode=...)`` cells (a renewal-process
+carry; see ``repro.core.execmode``), which replicate, sweep, and shard like
+every sync arm.  ``simulate_async_sgd`` (fully async = K-async with K=1) is
+kept event-driven and unvectorized precisely so the jitted engines can be
+checked against an independent implementation — tests/test_execmode.py pins
+exact trajectory agreement under deterministic fleets and distributional
+(KS) agreement under exponential ones, and benchmarks record the
+engine-vs-host-loop speedup (>= 5x warm is the gate; 46x measured).
+
+Used by benchmarks/fig3.py, benchmarks/fig_async.py and the agreement tests;
+not part of the pod dry-run.
 """
 
 from __future__ import annotations
@@ -52,11 +64,12 @@ def simulate_async_sgd(
         heapq.heappush(events, (float(first[i]), i))
 
     history: Dict[str, List[float]] = {"time": [], "loss": [], "updates": []}
-    t, n_updates = 0.0, 0
+    t, t_last, n_updates = 0.0, 0.0, 0
     while events:
         t, i = heapq.heappop(events)
         if t > total_time:
             break
+        t_last = t
         g = grad_fn(snapshots[i], i)  # stale gradient
         params = jax.tree.map(lambda p, gi: p - eta * gi, params, g)
         n_updates += 1
@@ -70,4 +83,10 @@ def simulate_async_sgd(
             history["time"].append(t)
             history["loss"].append(float(eval_fn(params)))
             history["updates"].append(n_updates)
+    if n_updates and n_updates % eval_every:
+        # Final partial point, so history['updates'][-1] is the exact total
+        # (benchmarks divide wall-clock by it for per-update throughput).
+        history["time"].append(t_last)
+        history["loss"].append(float(eval_fn(params)))
+        history["updates"].append(n_updates)
     return history

@@ -8,9 +8,16 @@ schedule (time-triggered), and a beyond-paper variance-ratio controller.
 All controllers share the same interface so the train step is policy-agnostic:
 
     state  = controller.init(params_like)
-    state, k = controller.update(state, grads, sim_time)
+    state, k = controller.update(state, grads, sim_time, stats)
 
 `k` is an int32 scalar *array* (traced), so changing k never recompiles.
+
+``stats`` is an optional ``repro.core.execmode.ExecStats`` — the execution
+mode's arrival-count / gradient-staleness signal (staleness in master
+updates, identically zero in sync mode).  Every controller accepts it; none
+of the current policies consume it — it is the hook staleness-aware adaptive
+k policies plug into (see ROADMAP).  Passing ``None`` (the default) keeps
+the historical 3-argument call sites working.
 """
 
 from __future__ import annotations
@@ -78,8 +85,9 @@ class PflugController:
             n_switches=jnp.asarray(0, jnp.int32),
         )
 
-    def update(self, state: PflugState, grads, sim_time: jax.Array) -> tuple[PflugState, jax.Array]:
-        del sim_time  # the heuristic is oblivious to the clock
+    def update(self, state: PflugState, grads, sim_time: jax.Array,
+               stats=None) -> tuple[PflugState, jax.Array]:
+        del sim_time, stats  # the heuristic is oblivious to the clock
         k_cap = self.k_max if self.k_max is not None else self.n_workers
         dot = _tree_dot(grads, state.prev_grad)
         # First iteration: no previous gradient -> no sign event.
@@ -174,8 +182,8 @@ class SketchedPflugController:
             z = z + t.reshape(-1, m).sum(axis=0)
         return z
 
-    def update(self, state: SketchedPflugState, grads, sim_time):
-        del sim_time
+    def update(self, state: SketchedPflugState, grads, sim_time, stats=None):
+        del sim_time, stats
         k_cap = self.k_max if self.k_max is not None else self.n_workers
         z = self._sketch(grads)
         dot = jnp.dot(z, state.prev_sketch)
@@ -217,8 +225,8 @@ class FixedKController:
         del params_like
         return FixedState(k=jnp.asarray(self.k, jnp.int32))
 
-    def update(self, state: FixedState, grads, sim_time):
-        del grads, sim_time
+    def update(self, state: FixedState, grads, sim_time, stats=None):
+        del grads, sim_time, stats
         return state, state.k
 
 
@@ -243,8 +251,8 @@ class ScheduleController:
         del params_like
         return ScheduleState(k=jnp.asarray(self.k0, jnp.int32))
 
-    def update(self, state: ScheduleState, grads, sim_time: jax.Array):
-        del grads
+    def update(self, state: ScheduleState, grads, sim_time: jax.Array, stats=None):
+        del grads, stats
         times = jnp.asarray(list(self.switch_times), jnp.float32)
         n_passed = jnp.sum(sim_time >= times).astype(jnp.int32)
         k = jnp.minimum(self.k0 + self.step * n_passed, self.n_workers)
@@ -290,8 +298,8 @@ class VarianceRatioController:
             n_switches=jnp.asarray(0, jnp.int32),
         )
 
-    def update(self, state: VarianceRatioState, grads, sim_time):
-        del sim_time
+    def update(self, state: VarianceRatioState, grads, sim_time, stats=None):
+        del sim_time, stats
         k_cap = self.k_max if self.k_max is not None else self.n_workers
         d = self.decay
         ema_mean = jax.tree.map(

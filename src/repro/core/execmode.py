@@ -1,0 +1,367 @@
+"""Execution modes: k-sync / K-async / K-batch-async SGD as one carry.
+
+The paper studies *synchronous* fastest-k SGD (wait for the fastest k of n
+fresh gradients, discard the rest).  Dutta et al. ("Slow and Stale Gradients
+Can Win the Race", arXiv:1803.01113) show the interesting comparison class is
+the asynchronous family, where stale gradients trade error-per-update for
+wall-clock exactly like the k knob does:
+
+* ``sync``   — every iteration all n workers draw fresh response times; the
+  master waits for the fastest k, applies their *fresh* partial gradients,
+  and restarts everyone.  Iteration time is the order statistic X_(k).
+* ``kasync`` — K-async SGD: workers compute continuously against the
+  parameter snapshot they were dispatched with.  The master waits for the
+  next K *completions*, applies their (stale) partial gradients averaged
+  over K, and redispatches exactly those K workers from the new model; the
+  other n-K keep computing (their clocks carry over as residuals).
+* ``kbatch`` — K-batch-async SGD: every completion redispatches its worker
+  immediately, and the master updates once K gradients have arrived — a
+  fast worker can contribute several gradients to one update.
+
+All three run **in-graph**: asynchrony is reformulated as a renewal process
+carried through the scan — per-worker residual clocks (time left on the
+current task), per-worker parameter snapshots (what each in-flight gradient
+is being computed against), and per-worker staleness counters.  Staleness is
+measured in *master updates*, per Dutta et al.: the counter records how many
+updates have been applied since the worker read its snapshot, i.e. the
+version gap between the parameters a gradient is applied to and the
+parameters it was computed at (0 for every sync-mode gradient).
+
+Residual clocks are exact for every straggler family: a worker's full task
+duration is sampled once at dispatch (``straggler.renewal_remaining``) and
+ticks down as master events pass — no residual-distribution sampling is ever
+needed.  For memoryless families (Exponential rows) redrawing a fresh time
+each event would be distributionally identical (the classic shortcut); the
+carried clock is what makes the engine exact for shifted/heavy-tailed
+families too.
+
+For K = n the ``kasync`` step degenerates to the sync step: every worker
+completes in every event (the event time is X_(n)), every snapshot equals
+the master's parameters, and every staleness counter stays 0.  The sync
+*mode* nevertheless keeps its own branch with the pre-refactor arithmetic,
+op for op, so sync-mode cells remain bitwise-equal to the historical engine
+(the repo's equality convention; pinned by tests/test_execmode.py).
+
+The step functions here are **shared verbatim** by ``repro.core.montecarlo``
+(class-based leaves, the per-cell ground truth) and ``repro.core.sweep``
+(traced grid leaves) — the construction that keeps the two engines
+bitwise-identical per cell.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregation
+from repro.core.straggler import renewal_remaining
+
+__all__ = [
+    "MODES",
+    "MODE_SYNC",
+    "MODE_KASYNC",
+    "MODE_KBATCH",
+    "ExecStats",
+    "ExecCarry",
+    "zero_stats",
+    "init_exec_carry",
+    "make_stale_grad_fns",
+    "make_mode_steps",
+]
+
+# Branch order is load-bearing: repro.core.sweep builds its lax.switch over
+# modes in this index order and bakes the indices into compiled programs.
+MODES = {"sync": 0, "kasync": 1, "kbatch": 2}
+MODE_SYNC, MODE_KASYNC, MODE_KBATCH = MODES["sync"], MODES["kasync"], MODES["kbatch"]
+
+
+class ExecStats(NamedTuple):
+    """Per-update arrival/staleness signal handed to controller updates.
+
+    ``arrivals`` is the number of gradients applied (K; k for sync),
+    ``mean_staleness``/``max_staleness`` summarize the staleness (in master
+    updates) of those gradients — identically zero in sync mode.  Current
+    controllers ignore the signal; it is the hook staleness-aware adaptive
+    policies plug into.
+    """
+
+    arrivals: jax.Array  # int32
+    mean_staleness: jax.Array  # f32
+    max_staleness: jax.Array  # int32
+
+
+def zero_stats(k: jax.Array) -> ExecStats:
+    return ExecStats(
+        arrivals=jnp.asarray(k, jnp.int32),
+        mean_staleness=jnp.asarray(0.0, jnp.float32),
+        max_staleness=jnp.asarray(0, jnp.int32),
+    )
+
+
+class ExecCarry(NamedTuple):
+    """Mode-agnostic scan carry (superset of the sync carry).
+
+    ``worker_params`` stacks each worker's dispatch-time parameter snapshot
+    along a leading (n_slots,) axis; ``remaining`` is each in-flight task's
+    residual clock; ``pending`` marks slots whose clock was already drawn
+    (False ⇒ the slot redispatches with a fresh draw at the next event);
+    ``staleness`` counts master updates since each worker read its snapshot.
+    Sync-mode steps leave all four untouched.
+    """
+
+    params: Any
+    worker_params: Any  # pytree with leading (n_slots,) axis
+    remaining: jax.Array  # (n_slots,) f32 residual clocks
+    staleness: jax.Array  # (n_slots,) int32
+    pending: jax.Array  # (n_slots,) bool
+    ctrl_state: Any
+    sim_time: jax.Array
+    key: jax.Array
+
+
+def init_exec_carry(params0, n_slots: int, ctrl_state, key: jax.Array) -> ExecCarry:
+    """t = 0: every worker is about to be dispatched from params0."""
+    worker_params = jax.tree.map(
+        lambda p: jnp.broadcast_to(p[None], (n_slots,) + p.shape), params0
+    )
+    return ExecCarry(
+        params=params0,
+        worker_params=worker_params,
+        remaining=jnp.zeros((n_slots,), jnp.float32),
+        staleness=jnp.zeros((n_slots,), jnp.int32),
+        pending=jnp.zeros((n_slots,), bool),
+        ctrl_state=ctrl_state,
+        sim_time=jnp.asarray(0.0, jnp.float32),
+        key=key,
+    )
+
+
+def _slot_bcast(mask: jax.Array, like: jax.Array) -> jax.Array:
+    """(n_slots,) mask reshaped to broadcast against an (n_slots, ...) leaf."""
+    return mask.reshape(mask.shape + (1,) * (like.ndim - 1))
+
+
+def make_stale_grad_fns(per_example_loss_fn: Callable, Xw, yw, n_slots: int):
+    """The stale-gradient machinery of the async modes, built ONCE here so
+    both engines trace identical ops (the bitwise sweep-vs-looped contract).
+
+    ``Xw``/``yw`` are the worker-major data reshaped to a leading
+    ``(n_slots, s)`` axis.  Returns ``(stale_grad, shard_grad_at)``:
+
+    * ``stale_grad(worker_params, mask_f32, k)`` — the master's K-async
+      update direction: each slot's per-example losses are evaluated at that
+      slot's OWN parameter snapshot (vmap over the stacked snapshots), fed
+      through the eq.-(2) segment-sum weighting
+      (``aggregation.stale_weighted_loss``), differentiated wrt the stack,
+      and row-summed — ``(1/k) * sum_i mask_i * (1/s) sum_shard grad F``.
+    * ``shard_grad_at(worker_params, i)`` — one slot's stale partial
+      gradient (the K-batch inner-event form; ``i`` may be traced).
+    """
+
+    def stale_loss(worker_params, mask, k):
+        losses = jax.vmap(per_example_loss_fn)(worker_params, Xw, yw)
+        return aggregation.stale_weighted_loss(losses.reshape(n_slots, -1), mask, k)
+
+    stale_grad_stack = jax.grad(stale_loss)
+
+    def stale_grad(worker_params, mask, k):
+        gs = stale_grad_stack(worker_params, mask, k)
+        # Row i is worker i's eq.-(2)-weighted stale partial gradient;
+        # the master applies their sum.
+        return jax.tree.map(lambda g: g.sum(axis=0), gs)
+
+    def shard_grad_at(worker_params, i):
+        wp_i = jax.tree.map(lambda a: a[i], worker_params)
+        Xi, yi = Xw[i], yw[i]
+        return jax.grad(lambda w: jnp.mean(per_example_loss_fn(w, Xi, yi)))(wp_i)
+
+    return stale_grad, shard_grad_at
+
+
+def make_mode_steps(
+    *,
+    n_slots: int,
+    draw: Callable,  # draw(sub, sim_time) -> (n_slots,) fresh task durations
+    sync_grad: Callable,  # sync_grad(params, mask, k) -> grad pytree (eq. 2)
+    stale_grad: Callable,  # stale_grad(worker_params, mask_f32, k) -> grad pytree
+    shard_grad_at: Callable,  # shard_grad_at(worker_params, i) -> worker i's partial grad
+    comm_time: Callable,  # comm_time(k) -> f32 master-side receive cost
+    eta,  # f32 scalar (python float or traced leaf)
+    ctrl_update: Callable,  # ctrl_update(state, g, sim_time, stats) -> (state, k)
+    ctrl_k: Callable = lambda s: s.k,  # current K from the controller state
+):
+    """The three execution-mode step functions over a shared ``ExecCarry``.
+
+    Each returns ``(new_carry, k)`` with identical pytree structure, so a
+    per-cell ``lax.switch`` over them vmaps cleanly.  All leaves the caller
+    closes over (straggler rows, eta, comm, controller hyperparameters) may
+    be traced — the functions contain no value-dependent Python branching.
+    """
+
+    def sync_step(carry: ExecCarry):
+        # Pre-refactor arithmetic, op for op: fresh draw -> fastest-k mask +
+        # order statistic -> eq.-(2) gradient at the master's params.  The
+        # async carry fields pass through untouched (bitwise identity).
+        new_key, sub = jax.random.split(carry.key)
+        k = ctrl_k(carry.ctrl_state)
+        times = draw(sub, carry.sim_time)
+        mask, t_iter = aggregation.fastest_k_mask_time(times, k)
+        t_iter = t_iter + comm_time(k)
+        g = sync_grad(carry.params, mask, k)
+        params = jax.tree.map(lambda p, gi: p - eta * gi, carry.params, g)
+        sim_time = carry.sim_time + t_iter
+        ctrl_state, _ = ctrl_update(carry.ctrl_state, g, sim_time, zero_stats(k))
+        return (
+            carry._replace(
+                params=params, ctrl_state=ctrl_state, sim_time=sim_time, key=new_key
+            ),
+            k,
+        )
+
+    def kasync_step(carry: ExecCarry):
+        # One master event: the next K completions arrive, their stale
+        # partial gradients (at their dispatch snapshots) are averaged and
+        # applied, and exactly those K workers redispatch from the new model.
+        new_key, sub = jax.random.split(carry.key)
+        k = ctrl_k(carry.ctrl_state)
+        remaining = renewal_remaining(
+            draw(sub, carry.sim_time), carry.pending, carry.remaining
+        )
+        # The sync hot-path primitive, reread over residual clocks: arrival
+        # set = the K smallest clocks, event duration = the K-th one.
+        arrive_f, tau = aggregation.fastest_k_mask_time(remaining, k)
+        arrive = arrive_f.astype(bool)
+        t_iter = tau + comm_time(k)
+        g = stale_grad(carry.worker_params, arrive_f, k)
+        params = jax.tree.map(lambda p, gi: p - eta * gi, carry.params, g)
+        sim_time = carry.sim_time + t_iter
+        kf = k.astype(jnp.float32)
+        stats = ExecStats(
+            arrivals=jnp.asarray(k, jnp.int32),
+            mean_staleness=jnp.dot(arrive_f, carry.staleness.astype(jnp.float32)) / kf,
+            max_staleness=jnp.max(jnp.where(arrive, carry.staleness, 0)),
+        )
+        ctrl_state, _ = ctrl_update(carry.ctrl_state, g, sim_time, stats)
+        # Arrivals redispatch from the fresh model (clock drawn next event);
+        # everyone else keeps computing, one update staler.
+        worker_params = jax.tree.map(
+            lambda wp, p: jnp.where(_slot_bcast(arrive, wp), p[None], wp),
+            carry.worker_params,
+            params,
+        )
+        staleness = jnp.where(arrive, 0, carry.staleness + 1)
+        # In-flight workers compute THROUGH the master's receive window, so
+        # their clocks tick down by the full event duration t_iter (not just
+        # tau); a task finishing inside that window arrives at the window's
+        # end — clamp at zero so it surfaces immediately next event.  With
+        # comm = 0 the clamp is a bitwise no-op (non-arrival clocks are
+        # >= tau by construction).
+        return (
+            ExecCarry(
+                params=params,
+                worker_params=worker_params,
+                remaining=jnp.maximum(remaining - t_iter, 0.0),
+                staleness=staleness,
+                pending=~arrive,
+                ctrl_state=ctrl_state,
+                sim_time=sim_time,
+                key=new_key,
+            ),
+            k,
+        )
+
+    def kbatch_step(carry: ExecCarry):
+        # One master event: K single completions in a row — each completer
+        # contributes its stale partial gradient and redispatches IMMEDIATELY
+        # (reading the still-pre-update params), so a fast worker can land
+        # several gradients in one update.  The inner scan runs a static
+        # n_slots events and masks the tail beyond the traced K — including
+        # the tail events' shard gradients (multiplied by 0): with K traced
+        # per cell the trip count cannot depend on it, so a kbatch update
+        # costs n_slots shard gradients (~ one full-batch gradient)
+        # regardless of K.  A static K bound could shorten the scan, but
+        # only by restructuring key consumption identically in both engines
+        # (the bitwise sweep-vs-looped pin).
+        new_key, key0 = jax.random.split(carry.key)
+        k = ctrl_k(carry.ctrl_state)
+        kf = k.astype(jnp.float32)
+        key0, sub0 = jax.random.split(key0)
+        remaining = renewal_remaining(
+            draw(sub0, carry.sim_time), carry.pending, carry.remaining
+        )
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), carry.params)
+        i32 = lambda v: jnp.asarray(v, jnp.int32)  # noqa: E731
+
+        def inner(state, e):
+            (rem, stal, wp, gsum, ssum, smax, tau_sum, key) = state
+            active = e < k
+            i_star = jnp.argmin(rem)  # ties -> lowest index, like the heapq
+            tau_e = rem[i_star]
+            g_e = shard_grad_at(wp, i_star)
+            w = jnp.where(active, jnp.float32(1.0), jnp.float32(0.0))
+            gsum = jax.tree.map(lambda a, b: a + w * b, gsum, g_e)
+            ssum = ssum + jnp.where(active, stal[i_star], 0)
+            smax = jnp.maximum(smax, jnp.where(active, stal[i_star], 0))
+            key, sub = jax.random.split(key)
+            # A full (n_slots,) draw per inner event, of which only the
+            # completer's entry is kept: O(n) spare samples per arrival, but
+            # it reuses the packed per-worker protocol unchanged (and the
+            # per-event shard gradient above, O(s*d), dominates the O(n)
+            # sampling in this loop anyway).
+            redraw = draw(sub, carry.sim_time + tau_sum + tau_e)
+            rem_next = jnp.where(active, rem - tau_e, rem)
+            rem_next = rem_next.at[i_star].set(
+                jnp.where(active, redraw[i_star], rem[i_star])
+            )
+            stal_next = jnp.where(active, stal.at[i_star].set(0), stal)
+            wp_next = jax.tree.map(
+                lambda a, p: jnp.where(active, a.at[i_star].set(p), a),
+                wp,
+                carry.params,
+            )
+            tau_next = tau_sum + jnp.where(active, tau_e, 0.0)
+            return (rem_next, stal_next, wp_next, gsum, ssum, smax, tau_next, key), None
+
+        init = (
+            remaining,
+            carry.staleness,
+            carry.worker_params,
+            g0,
+            i32(0),
+            i32(0),
+            jnp.asarray(0.0, jnp.float32),
+            key0,
+        )
+        (remaining, staleness, worker_params, gsum, ssum, smax, tau_sum, _), _ = (
+            jax.lax.scan(inner, init, jnp.arange(n_slots))
+        )
+        g = jax.tree.map(lambda x: x / kf, gsum)
+        params = jax.tree.map(lambda p, gi: p - eta * gi, carry.params, g)
+        t_iter = tau_sum + comm_time(k)
+        sim_time = carry.sim_time + t_iter
+        stats = ExecStats(
+            arrivals=jnp.asarray(k, jnp.int32),
+            mean_staleness=ssum.astype(jnp.float32) / kf,
+            max_staleness=smax,
+        )
+        ctrl_state, _ = ctrl_update(carry.ctrl_state, g, sim_time, stats)
+        return (
+            ExecCarry(
+                params=params,
+                # Carried clocks also run through the master's receive
+                # window (comm = 0 keeps this a bitwise no-op; see kasync).
+                remaining=jnp.maximum(remaining - comm_time(k), 0.0),
+                worker_params=worker_params,
+                # The update just applied ages every in-flight task by one.
+                staleness=staleness + 1,
+                pending=jnp.ones((n_slots,), bool),
+                ctrl_state=ctrl_state,
+                sim_time=sim_time,
+                key=new_key,
+            ),
+            k,
+        )
+
+    return sync_step, kasync_step, kbatch_step

@@ -44,6 +44,7 @@ API sketch::
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import math
 from typing import Callable, NamedTuple
 
@@ -51,7 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import aggregation
+from repro.core import aggregation, execmode
 from repro.core.straggler import (
     StragglerModel,
     WorkerFleet,
@@ -258,6 +259,135 @@ def _build_program(
     return jax.jit(run_all)
 
 
+def _build_async_program(
+    per_example_loss_fn: Callable,
+    n_workers: int,
+    controller,
+    straggler: StragglerModel,
+    comm,
+    eta: float,
+    num_iters: int,
+    eval_every: int,
+    unroll: int,
+    mode: str,
+):
+    """K-async / K-batch-async variant: the renewal-process carry
+    (``execmode.ExecCarry``) threaded through the same eval-block scaffolding
+    as the sync program.  The per-event step functions are the SAME code the
+    sweep engine traces (``execmode.make_mode_steps``), so an async sweep
+    cell is bitwise-equal to this program for identical PRNG keys."""
+    n_full, rem = divmod(num_iters, eval_every)
+    mode_idx = execmode.MODES[mode]
+
+    is_fleet = isinstance(straggler, WorkerFleet)
+    if is_fleet:
+        pmat_np, kinds_np, _ = pack_params_per_worker(straggler, n_workers)
+        n_knots = len(straggler.schedule.times) if straggler.schedule else 0
+        sched_np = pack_schedule(straggler.schedule, max(1, n_knots))
+
+    # Class controllers all take the ExecStats signal; tolerate user-supplied
+    # policies that predate it (they see the historical 3-argument call).
+    try:
+        accepts_stats = len(inspect.signature(controller.update).parameters) >= 4
+    except (TypeError, ValueError):  # builtins / exotic callables
+        accepts_stats = True
+
+    def run_all(params0, X, y, keys, n_active_arg=None):
+        global _N_TRACES
+        _N_TRACES += 1
+        s = X.shape[0] // n_workers
+        Xw = X.reshape((n_workers, s) + X.shape[1:])
+        yw = y.reshape((n_workers, s) + y.shape[1:])
+
+        if is_fleet:
+            pmat = jnp.asarray(pmat_np)
+            kinds = jnp.asarray(kinds_np)
+            sched = tuple(jnp.asarray(a) for a in sched_np)
+
+            def draw(sub, sim_time):
+                pm = apply_rate_schedule(pmat, *sched, sim_time)
+                return sample_times_per_worker(kinds, pm, sub)
+
+            def mean_loss(params):
+                losses = per_example_loss_fn(params, X, y)
+                return aggregation.active_worker_mean_loss(
+                    losses, n_active_arg, n_workers, s
+                )
+
+        else:
+
+            def draw(sub, sim_time):
+                del sim_time
+                return straggler.sample(sub, n_workers)
+
+            def mean_loss(params):
+                return jnp.mean(per_example_loss_fn(params, X, y))
+
+        def step_loss(params, mask, k):
+            losses = per_example_loss_fn(params, X, y)
+            return aggregation.fastest_k_weighted_loss(losses, mask, k, s)
+
+        stale_grad, shard_grad_at = execmode.make_stale_grad_fns(
+            per_example_loss_fn, Xw, yw, n_workers
+        )
+
+        if comm is not None:
+            comm_time = comm.time
+        else:
+            comm_time = lambda k: jnp.asarray(0.0, jnp.float32)  # noqa: E731
+
+        def ctrl_update(state, g, sim_time, stats):
+            if accepts_stats:
+                return controller.update(state, g, sim_time, stats)
+            return controller.update(state, g, sim_time)
+
+        def ctrl_k(state):
+            return state.k if hasattr(state, "k") else state[0]
+
+        steps = execmode.make_mode_steps(
+            n_slots=n_workers,
+            draw=draw,
+            sync_grad=jax.grad(step_loss),
+            stale_grad=stale_grad,
+            shard_grad_at=shard_grad_at,
+            comm_time=comm_time,
+            eta=eta,
+            ctrl_update=ctrl_update,
+            ctrl_k=ctrl_k,
+        )
+        one_step = steps[mode_idx]
+
+        def eval_block(carry, length: int):
+            carry, ks = jax.lax.scan(
+                lambda c, _: one_step(c), carry, None,
+                length=length, unroll=min(unroll, length),
+            )
+            return carry, (carry.sim_time, mean_loss(carry.params), ks[-1])
+
+        def run_one(replica_key):
+            carry = execmode.init_exec_carry(
+                params0, n_workers, controller.init(params0), replica_key
+            )
+            records = None
+            if n_full:
+                carry, records = jax.lax.scan(
+                    lambda c, _: eval_block(c, eval_every), carry, None, length=n_full
+                )
+            if rem:
+                carry, last = eval_block(carry, rem)
+                last = jax.tree.map(lambda x: x[None], last)
+                records = (
+                    last
+                    if records is None
+                    else jax.tree.map(lambda a, b: jnp.concatenate([a, b]), records, last)
+                )
+            return records
+
+        return jax.vmap(run_one)(keys)
+
+    return jax.jit(run_all)
+
+
 def run_monte_carlo(
     per_example_loss_fn: Callable,  # (params, X, y) -> per-example losses (m,)
     params0,
@@ -274,6 +404,7 @@ def run_monte_carlo(
     comm: aggregation.CommModel | None = None,
     eval_every: int = 10,
     unroll: int = 8,
+    mode: str = "sync",
 ) -> MonteCarloResult:
     """Run R independent fastest-k SGD replicas in one jitted program.
 
@@ -288,6 +419,19 @@ def run_monte_carlo(
     horizontal partition); each participating worker contributes the full
     partial gradient over its shard — eq. (2) — realized through a
     per-worker segment sum of the per-example losses.
+
+    ``mode`` selects the execution mode (see ``repro.core.execmode``):
+    ``"sync"`` is the paper's fastest-k lock step (the default; the program
+    is byte-identical to the pre-mode engine), ``"kasync"`` waits for the
+    next k *completions* and applies their stale partial gradients, and
+    ``"kbatch"`` redispatches every completer immediately so fast workers
+    can land several gradients per update.  In the async modes the
+    controller's k plays the role of K (arrivals per update), its update
+    receives arrival/staleness statistics (``ExecStats``), and one
+    "iteration" is one master update.  Each async cell here is the bitwise
+    ground truth the sweep engine's async cells are pinned against; the
+    event-driven host loop (``repro.core.async_sim``) is the independent
+    reference the k=1 kasync trajectory is validated on.
 
     ``straggler`` may be a ``WorkerFleet``: per-worker (heterogeneous)
     response distributions, an optional in-graph rate schedule driven by the
@@ -308,6 +452,10 @@ def run_monte_carlo(
         raise ValueError(f"eval_every must be positive, got {eval_every}")
     if num_iters <= 0:
         raise ValueError(f"num_iters must be positive, got {num_iters}")
+    if mode not in execmode.MODES:
+        raise ValueError(
+            f"unknown mode {mode!r}; options {sorted(execmode.MODES)}"
+        )
     if isinstance(straggler, WorkerFleet):
         # Mirror sweep._cell_of: a controller sized to more workers than the
         # fleet has active would wait on +inf inactive slots once k exceeds
@@ -329,13 +477,20 @@ def run_monte_carlo(
         int(num_iters),
         int(eval_every),
         int(unroll),
+        str(mode),
     )
     program = _PROGRAM_CACHE.get(cache_key)
     if program is None:
-        program = _build_program(
-            per_example_loss_fn, n_workers, controller, straggler, comm,
-            eta, num_iters, eval_every, unroll,
-        )
+        if mode == "sync":
+            program = _build_program(
+                per_example_loss_fn, n_workers, controller, straggler, comm,
+                eta, num_iters, eval_every, unroll,
+            )
+        else:
+            program = _build_async_program(
+                per_example_loss_fn, n_workers, controller, straggler, comm,
+                eta, num_iters, eval_every, unroll, mode,
+            )
         _PROGRAM_CACHE[cache_key] = program
     if isinstance(straggler, WorkerFleet):
         times, losses, ks = program(

@@ -6,13 +6,16 @@ now a thin R=1 wrapper over the vectorized Monte-Carlo engine
 trajectory — ``lax.scan`` over iterations with periodic loss evaluation
 in-graph — rather than a chunked host loop.  History is recorded at *every*
 ``eval_every`` iterations exactly (plus a final point at ``num_iters`` when
-it is not a multiple).  The LM-scale equivalent (sharded, pjit) lives in
-repro/launch/train.py — this module is the paper-faithful small-scale path
-where stragglers, k and the clock can be studied cheaply.
+it is not a multiple).  ``mode`` selects the execution mode (k-sync /
+K-async / K-batch-async; see ``repro.core.execmode``).  The LM-scale
+equivalent (sharded, pjit) lives in repro/launch/train.py — this module is
+the paper-faithful small-scale path where stragglers, k and the clock can be
+studied cheaply.
 """
 
 from __future__ import annotations
 
+import warnings
 from typing import Callable, Dict, List
 
 import jax
@@ -22,6 +25,9 @@ from repro.core.montecarlo import run_monte_carlo
 from repro.core.straggler import StragglerModel
 
 __all__ = ["simulate_fastest_k"]
+
+_SENTINEL = object()  # distinguishes "chunk not passed" from any user value
+_warned_chunk = False
 
 
 def simulate_fastest_k(
@@ -37,16 +43,33 @@ def simulate_fastest_k(
     key: jax.Array,
     comm: aggregation.CommModel | None = None,
     eval_every: int = 10,
-    chunk: int = 50,  # retained for API compatibility; eval is in-graph now
+    chunk=_SENTINEL,  # deprecated: eval is in-graph, nothing is chunked
+    mode: str = "sync",
 ) -> Dict[str, List[float]]:
     """Run adaptive/fixed fastest-k SGD; returns {'time','loss','k'} history.
 
     Each worker owns a contiguous shard of m/n examples (paper's horizontal
     partition).  Every iteration each participating worker contributes the
     full partial gradient over its shard — eq. (2) exactly — realized as the
-    gradient of the fastest-k weighted loss.
+    gradient of the fastest-k weighted loss.  With ``mode="kasync"`` /
+    ``"kbatch"`` the same call simulates the stale-gradient asynchronous
+    family instead (one "iteration" = one master update of K arrivals).
+
+    ``chunk`` is dead: the engine evaluates in-graph, so nothing has been
+    chunked since the host loop was retired.  Passing it emits a one-time
+    ``DeprecationWarning`` and has no other effect.
     """
-    del chunk
+    if chunk is not _SENTINEL:
+        global _warned_chunk
+        if not _warned_chunk:
+            _warned_chunk = True
+            warnings.warn(
+                "simulate_fastest_k(chunk=...) is deprecated and ignored: "
+                "history is recorded in-graph at every eval_every iterations "
+                "exactly; drop the argument.",
+                DeprecationWarning,
+                stacklevel=2,
+            )
     result = run_monte_carlo(
         per_example_loss_fn,
         params0,
@@ -60,6 +83,7 @@ def simulate_fastest_k(
         keys=key[None],
         comm=comm,
         eval_every=eval_every,
+        mode=mode,
     )
     return {
         "time": [float(t) for t in result.time[0]],

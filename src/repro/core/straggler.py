@@ -42,6 +42,7 @@ __all__ = [
     "sample_times_per_worker",
     "schedule_multiplier",
     "apply_rate_schedule",
+    "renewal_remaining",
 ]
 
 # Packed-parameter protocol (used by repro.core.sweep and the heterogeneous
@@ -564,3 +565,26 @@ def sample_times_per_worker(kinds, pmat, key) -> jax.Array:
     return jax.vmap(
         lambda kind, col: jax.lax.switch(kind, branches, col)
     )(kinds, stacked.T)
+
+
+def renewal_remaining(
+    fresh: jax.Array, pending: jax.Array, remaining: jax.Array
+) -> jax.Array:
+    """Residual-time rule of the per-worker renewal protocol (async modes).
+
+    A worker's full task duration is sampled ONCE, at dispatch, from its
+    packed row (``fresh`` — typically ``sample_times_per_worker`` at the
+    dispatch-time rates); while the task is in flight the carried residual
+    clock ``remaining`` simply ticks down as master events pass.  Slots with
+    ``pending`` set keep their residual; slots without take the fresh draw.
+
+    Carried residuals are *exact* for every family — no residual
+    distribution is ever sampled.  For memoryless rows (Exponential) the
+    residual is distributionally a fresh draw anyway (the classic shortcut),
+    which is why the sync engine's redraw-every-iteration is already the
+    exact asynchronous residual process for Exponential fleets; the carried
+    clock is what extends exactness to shifted/heavy-tailed/deterministic
+    families.  Inactive (+inf) slots draw +inf and stay pending forever, so
+    they can never be dispatched into an arrival set.
+    """
+    return jnp.where(pending, remaining, fresh)

@@ -66,7 +66,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import aggregation
+from repro.core import aggregation, execmode
 from repro.core.controller import (
     FixedKController,
     PflugController,
@@ -117,6 +117,13 @@ class SweepCase:
     worker count is ``controller.n_workers``; when it is smaller than the
     engine's ``n_workers`` slot count the remaining slots are inactive
     (+inf response times, data held out) — this is how n varies per cell.
+
+    ``mode`` is the cell's execution mode (``repro.core.execmode.MODES``):
+    ``"sync"`` fastest-k lock step (default), ``"kasync"`` K-async SGD,
+    ``"kbatch"`` K-batch-async SGD.  In the async modes the controller's k
+    is K — the number of (stale) gradient arrivals per master update.  Mode
+    is a traced grid leaf: sync and async arms run in ONE compiled program,
+    and repopulating an equally-shaped mixed grid never retraces.
     """
 
     controller: Any
@@ -124,6 +131,7 @@ class SweepCase:
     eta: float
     comm: aggregation.CommModel | None = None
     label: str = ""
+    mode: str = "sync"
 
     def name(self) -> str:
         if self.label:
@@ -147,6 +155,7 @@ class _CellParams(NamedTuple):
     """One grid cell as traced leaves (stacked to (G, ...) across the grid)."""
 
     ctrl_kind: jax.Array  # int32 — index into the controller lax.switch
+    mode: jax.Array  # int32 — execution mode (execmode.MODES lax.switch)
     k0: jax.Array  # int32
     step: jax.Array  # int32
     thresh: jax.Array  # int32
@@ -256,6 +265,11 @@ def _cell_of(
             f"cell {case.name()!r}: fleet has {case.straggler.n_active} models "
             f"but controller.n_workers={n_active}"
         )
+    if case.mode not in execmode.MODES:
+        raise ValueError(
+            f"cell {case.name()!r}: unknown mode {case.mode!r}; options "
+            f"{sorted(execmode.MODES)}"
+        )
     k0, step, thresh, burnin = 1, 0, 0, 0
     k_max = n_active
     decay = ratio_thresh = 0.0
@@ -290,6 +304,7 @@ def _cell_of(
     comm = case.comm or aggregation.CommModel()
     return _CellParams(
         ctrl_kind=i32(kind),
+        mode=i32(execmode.MODES[case.mode]),
         k0=i32(k0),
         step=i32(step),
         thresh=i32(thresh),
@@ -333,13 +348,13 @@ def _ctrl_init(cp: _CellParams, params_like, sketch_dim: int) -> _CtrlState:
     )
 
 
-def _branch_fixed(cp, state, grads, sim_time):
-    del cp, grads, sim_time
+def _branch_fixed(cp, state, grads, sim_time, stats):
+    del cp, grads, sim_time, stats
     return state, state.k
 
 
-def _branch_pflug(cp, state, grads, sim_time):
-    del sim_time
+def _branch_pflug(cp, state, grads, sim_time, stats):
+    del sim_time, stats
     dot = _tree_dot(grads, state.prev_grad)
     delta = jnp.where(state.have_prev, jnp.where(dot < 0, 1, -1), 0).astype(jnp.int32)
     count_neg = state.count_negative + delta
@@ -362,8 +377,8 @@ def _branch_pflug(cp, state, grads, sim_time):
     return new_state, new_k
 
 
-def _branch_schedule(cp, state, grads, sim_time):
-    del grads
+def _branch_schedule(cp, state, grads, sim_time, stats):
+    del grads, stats
     n_passed = jnp.sum(sim_time >= cp.switch_times).astype(jnp.int32)
     # Cap at the cell's ACTIVE worker count — with n as a grid axis the
     # class-side cap (ScheduleController.n_workers) is a per-cell value.
@@ -371,8 +386,8 @@ def _branch_schedule(cp, state, grads, sim_time):
     return state._replace(k=k), k
 
 
-def _branch_variance_ratio(cp, state, grads, sim_time):
-    del sim_time
+def _branch_variance_ratio(cp, state, grads, sim_time, stats):
+    del sim_time, stats
     d, omd = cp.decay, cp.one_minus_decay
     ema_mean = jax.tree.map(
         lambda m, g: d * m + omd * g.astype(jnp.float32), state.ema_mean, grads
@@ -420,8 +435,8 @@ def _apply_sketch(signs, grads, sketch_dim: int) -> jax.Array:
 
 
 def _make_branch_sketched_pflug(sketch_dim: int):
-    def _branch_sketched_pflug(cp, state, grads, sim_time):
-        del sim_time
+    def _branch_sketched_pflug(cp, state, grads, sim_time, stats):
+        del sim_time, stats
         z = _apply_sketch(cp.sketch_signs, grads, sketch_dim)
         dot = jnp.dot(z, state.prev_sketch)
         delta = jnp.where(state.have_prev, jnp.where(dot < 0, 1, -1), 0).astype(jnp.int32)
@@ -447,7 +462,9 @@ def _make_branch_sketched_pflug(sketch_dim: int):
     return _branch_sketched_pflug
 
 
-def _ctrl_update(cp: _CellParams, state, grads, sim_time, sketch_dim: int):
+def _ctrl_update(cp: _CellParams, state, grads, sim_time, stats, sketch_dim: int):
+    # ``stats`` (execmode.ExecStats) rides through the switch untouched by
+    # the current policies — the hook staleness-aware controllers plug into.
     branches = (
         _branch_fixed,
         _branch_pflug,
@@ -455,7 +472,7 @@ def _ctrl_update(cp: _CellParams, state, grads, sim_time, sketch_dim: int):
         _branch_variance_ratio,
         _make_branch_sketched_pflug(sketch_dim),
     )
-    return jax.lax.switch(cp.ctrl_kind, branches, cp, state, grads, sim_time)
+    return jax.lax.switch(cp.ctrl_kind, branches, cp, state, grads, sim_time, stats)
 
 
 # ---------------------------------------------------------------- the engine
@@ -468,9 +485,98 @@ class _SweepCarry(NamedTuple):
     key: jax.Array
 
 
+def _make_run_one_moded(
+    per_example_loss_fn: Callable,
+    n_workers: int,
+    s: int,
+    params0,
+    X,
+    y,
+    grad_fn: Callable,
+    mean_loss: Callable,
+    sketch_dim: int,
+    n_full: int,
+    rem: int,
+    eval_every: int,
+    unroll: int,
+):
+    """Execution-mode-aware run_one: the ``execmode.ExecCarry`` superset
+    threaded through the same eval-block scaffolding, with a per-cell
+    ``lax.switch`` over the three mode step functions.  Under vmap the
+    switch computes every branch and selects, so ``mode`` is an ordinary
+    traced grid leaf — sync and async arms share ONE compiled program and
+    repopulating an equally-shaped mixed grid never retraces.  The sync
+    branch performs the pre-mode arithmetic op for op (select passes the
+    chosen operand through unchanged), so sync cells in a mixed grid stay
+    bitwise-equal to the lean engine; the async branches are the SAME step
+    functions the looped ``run_monte_carlo(mode=...)`` traces."""
+    Xw = X.reshape((n_workers, s) + X.shape[1:])
+    yw = y.reshape((n_workers, s) + y.shape[1:])
+    stale_grad, shard_grad_at = execmode.make_stale_grad_fns(
+        per_example_loss_fn, Xw, yw, n_workers
+    )
+
+    def run_one(cp: _CellParams, replica_key):
+        def draw(sub, sim_time):
+            pm = apply_rate_schedule(
+                cp.strag_p, cp.sched_mode, cp.sched_leaf,
+                cp.sched_times, cp.sched_scales, sim_time,
+            )
+            return sample_times_per_worker(cp.strag_kinds, pm, sub)
+
+        def comm_time(k):
+            return cp.comm_alpha + cp.comm_beta * k.astype(jnp.float32)
+
+        def ctrl_update(state, g, sim_time, stats):
+            return _ctrl_update(cp, state, g, sim_time, stats, sketch_dim)
+
+        steps = execmode.make_mode_steps(
+            n_slots=n_workers,
+            draw=draw,
+            sync_grad=grad_fn,
+            stale_grad=stale_grad,
+            shard_grad_at=shard_grad_at,
+            comm_time=comm_time,
+            eta=cp.eta,
+            ctrl_update=ctrl_update,
+        )
+
+        def one_step(carry: execmode.ExecCarry, _):
+            return jax.lax.switch(cp.mode, steps, carry)
+
+        def eval_block(carry: execmode.ExecCarry, length: int):
+            carry, ks = jax.lax.scan(
+                one_step, carry, None, length=length, unroll=min(unroll, length)
+            )
+            return carry, (
+                carry.sim_time, mean_loss(carry.params, cp.n_active), ks[-1]
+            )
+
+        carry = execmode.init_exec_carry(
+            params0, n_workers, _ctrl_init(cp, params0, sketch_dim), replica_key
+        )
+        records = None
+        if n_full:
+            carry, records = jax.lax.scan(
+                lambda c, _: eval_block(c, eval_every), carry, None, length=n_full
+            )
+        if rem:
+            carry, last = eval_block(carry, rem)
+            last = jax.tree.map(lambda x: x[None], last)
+            records = (
+                last
+                if records is None
+                else jax.tree.map(lambda a, b: jnp.concatenate([a, b]), records, last)
+            )
+        return records
+
+    return run_one
+
+
 # (loss_fn, n_workers, num_iters, eval_every, unroll, n_switch_slots,
-#  n_sched_slots, sketch_dim, partition, ndev) -> jitted flat program.  Jit's
-# own cache handles shapes (grid size, params/X/y shapes) under each entry.
+#  n_sched_slots, sketch_dim, partition, ndev, with_async) -> jitted flat
+# program.  Jit's own cache handles shapes (grid size, params/X/y shapes)
+# under each entry.
 _PROGRAM_CACHE: dict = {}
 _N_TRACES = 0
 
@@ -494,6 +600,7 @@ def _build_flat_program(
     sketch_dim: int,
     partition: str,
     mesh: Mesh | None,
+    with_async: bool = False,
 ):
     n_full, rem = divmod(num_iters, eval_every)
 
@@ -512,6 +619,12 @@ def _build_flat_program(
             losses = per_example_loss_fn(params, X, y)
             return aggregation.active_worker_mean_loss(losses, n_active, n_workers, s)
 
+        if with_async:
+            return _make_run_one_moded(
+                per_example_loss_fn, n_workers, s, params0, X, y,
+                grad_fn, mean_loss, sketch_dim, n_full, rem, eval_every, unroll,
+            )
+
         def run_one(cp: _CellParams, replica_key):
             def one_step(carry: _SweepCarry, _):
                 new_key, sub = jax.random.split(carry.key)
@@ -527,7 +640,8 @@ def _build_flat_program(
                 params = jax.tree.map(lambda p, gi: p - cp.eta * gi, carry.params, g)
                 sim_time = carry.sim_time + t_iter
                 ctrl_state, _ = _ctrl_update(
-                    cp, carry.ctrl_state, g, sim_time, sketch_dim
+                    cp, carry.ctrl_state, g, sim_time, execmode.zero_stats(k),
+                    sketch_dim,
                 )
                 return _SweepCarry(params, ctrl_state, sim_time, new_key), k
 
@@ -695,6 +809,13 @@ def run_sweep(
             "one sweep supports a single static sketch layout"
         )
     sketch_dim = sketch_dims.pop() if sketch_dims else 1
+    # Static program-family flag: an all-sync grid compiles the lean
+    # pre-mode program (no async carry, no branch switch — byte-identical to
+    # the historical engine and its perf baseline); any async cell selects
+    # the unified ExecCarry program, in which `mode` is an ordinary traced
+    # leaf (mixed grids of the same shape and mode-capability never
+    # retrace).
+    with_async = any(c.mode != "sync" for c in cases)
     G, R = len(cases), keys.shape[0]
     cells_np = [
         _cell_of(c, n_workers, n_switch_slots, n_sched_slots, sketch_dim, params0)
@@ -735,12 +856,13 @@ def run_sweep(
         int(sketch_dim),
         partition,
         ndev,
+        with_async,
     )
     program = _PROGRAM_CACHE.get(cache_key)
     if program is None:
         program = _build_flat_program(
             per_example_loss_fn, n_workers, num_iters, eval_every, unroll,
-            sketch_dim, partition, mesh,
+            sketch_dim, partition, mesh, with_async,
         )
         _PROGRAM_CACHE[cache_key] = program
     times, losses, ks = program(params0, X, y, flat_cells, flat_keys)

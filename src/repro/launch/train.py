@@ -54,11 +54,15 @@ def _run_simulation(args):
 
     ``--sim-n-grid`` makes the worker count an ordinary grid axis (cells are
     padded to the largest n; smaller-n cells hold the extra slots inactive).
+    ``--sim-mode`` picks the execution mode (sync fastest-k, K-async,
+    K-batch-async; a comma list makes mode a grid axis — every arm still
+    runs in the same single dispatch).
     ``--sim-hetero FRAC:FACTOR`` swaps the straggler axis for a two-speed
     exponential fleet — a FRAC fraction of each cell's workers is FACTOR x
     slower — and ``--sim-drift T:SCALE`` adds a fleet-wide mid-run rate
     drift (every rate is multiplied by SCALE at simulated time T).
     """
+    from repro.core.execmode import MODES
     from repro.core.straggler import Exponential, RateSchedule, WorkerFleet
     from repro.core.sweep import SweepCase, run_sweep, summarize_cells
     from repro.data import make_linreg_data
@@ -133,10 +137,19 @@ def _run_simulation(args):
         raise SystemExit(f"--sim-controllers: unknown controller {name!r}")
 
     comm = CommModel(alpha=args.comm_alpha, beta=args.comm_beta)
+    modes = [mm for mm in args.sim_mode.split(",") if mm]
+    for mm in modes:
+        if mm not in MODES:
+            raise SystemExit(f"--sim-mode: unknown mode {mm!r}; "
+                             f"options {sorted(MODES)}")
+    if not modes:
+        raise SystemExit("--sim-mode: need at least one mode")
     n_tag = lambda n: f"|n{n}" if len(n_values) > 1 else ""
+    mode_tag = lambda mm: f"|{mm}" if len(modes) > 1 else ""
     cases = [
         SweepCase(make_controller(cname, strag, n), strag, eta=eta, comm=comm,
-                  label=f"{cname}|{sname}{n_tag(n)}")
+                  label=f"{cname}|{sname}{n_tag(n)}{mode_tag(mm)}", mode=mm)
+        for mm in modes
         for n in n_values
         for sname, strag in stragglers_for(n).items()
         for cname in ctrl_names
@@ -233,6 +246,11 @@ def main(argv=None):
                     help="simulate: fleet-wide rate drift — multiply every "
                          "worker's rate by SCALE at simulated time T "
                          "(e.g. 500:0.4)")
+    ap.add_argument("--sim-mode", default="sync", metavar="MODE[,MODE..]",
+                    help="simulate: execution mode(s) from {sync,kasync,"
+                         "kbatch}; a comma list sweeps mode as a grid axis "
+                         "(async modes apply stale gradients, k = arrivals "
+                         "per master update)")
     ap.add_argument("--sim-n-grid", default=None, metavar="N1,N2,...",
                     help="simulate: sweep the worker count as a grid axis; "
                          "cells are padded to the largest n (overrides "

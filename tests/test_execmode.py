@@ -1,0 +1,431 @@
+"""Execution-mode axis tests: the jitted K-async / K-batch-async engines
+against the event-driven host-loop reference, the bitwise sweep-vs-looped
+pins in every mode, the sync-mode bitwise invariant through the new carry,
+retrace behavior of mixed grids, WorkerFleet misuse errors, and the
+``chunk`` deprecation."""
+
+import warnings
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.async_sim import simulate_async_sgd
+from repro.core.controller import FixedKController, PflugController
+from repro.core.aggregation import CommModel
+from repro.core.montecarlo import run_monte_carlo
+from repro.core.simulate import simulate_fastest_k
+from repro.core.straggler import (
+    Deterministic,
+    Exponential,
+    Pareto,
+    RateSchedule,
+    WorkerFleet,
+    pack_params_per_worker,
+)
+from repro.core.sweep import SweepCase, run_sweep, sweep_cache_stats
+from repro.data import make_linreg_data
+
+N, M, D = 8, 160, 4
+
+
+@pytest.fixture(scope="module")
+def linreg():
+    data = make_linreg_data(jax.random.PRNGKey(0), m=M, d=D)
+    L = 2 * float(jnp.linalg.eigvalsh(data.X.T @ data.X / M).max())
+    # Async-stable step size: stale full-size updates arrive ~n x more often
+    # than sync iterations, so the sync-stable 0.5/L diverges under k=1
+    # asynchrony (the instability ref [2] analyzes).
+    return data, 0.05 / L
+
+
+def _loss(w, X, y):
+    return (X @ w - y) ** 2
+
+
+def _host_reference(data, eta, straggler, key, total_time, eval_every=1):
+    """The event-driven host loop with the engines' gradient semantics:
+    each worker's partial gradient is the mean loss over its contiguous
+    shard (eq. 2 with k=1)."""
+    s = M // N
+
+    def grad_fn(params, worker):
+        Xi = jax.lax.dynamic_slice_in_dim(data.X, worker * s, s, 0)
+        yi = jax.lax.dynamic_slice_in_dim(data.y, worker * s, s, 0)
+        return jax.grad(lambda p: jnp.mean((Xi @ p - yi) ** 2))(params)
+
+    return simulate_async_sgd(
+        grad_fn,
+        lambda p: jnp.mean(_loss(p, data.X, data.y)),
+        jnp.zeros((D,)),
+        n_workers=N,
+        eta=eta,
+        straggler=straggler,
+        total_time=total_time,
+        key=key,
+        eval_every=eval_every,
+    )
+
+
+# ------------------------- agreement with the event-driven host reference
+
+
+def test_kasync_k1_exact_match_vs_host_loop_deterministic(linreg):
+    """Fully-async (K=1) under a Deterministic fleet: event order is
+    unambiguous (ties broken by worker index in both implementations), so
+    the jitted renewal engine must reproduce the host loop's trajectory
+    exactly — update times bitwise, losses to f32 arithmetic noise."""
+    data, eta = linreg
+    key = jax.random.PRNGKey(3)
+    U = 64
+    res = run_monte_carlo(
+        _loss, jnp.zeros((D,)), data.X, data.y, n_workers=N,
+        controller=FixedKController(n_workers=N, k=1),
+        straggler=Deterministic(value=1.0), eta=eta, num_iters=U,
+        keys=key[None], eval_every=4, mode="kasync",
+    )
+    h = _host_reference(
+        data, eta, Deterministic(value=1.0), key,
+        total_time=float(res.time[0, -1]), eval_every=4,
+    )
+    ne = min(len(h["time"]), res.time.shape[1])
+    assert ne >= U // 4 - 1
+    np.testing.assert_array_equal(
+        np.asarray(res.time[0, :ne]), np.asarray(h["time"][:ne], np.float32)
+    )
+    np.testing.assert_allclose(
+        np.asarray(res.loss[0, :ne]), np.asarray(h["loss"][:ne]),
+        rtol=2e-5, atol=1e-7,
+    )
+
+
+def test_kasync_exponential_ks_match_vs_host_loop(linreg):
+    """Exponential fleet, K=1: exact event order is seed-dependent, but the
+    update-time process is identical in law (a Poisson superposition), so
+    the engine's inter-update gaps must match the host loop's at KS level —
+    and both must match the analytic Exp(n * rate) gap distribution."""
+    data, eta = linreg
+    rate, U, R = 1.0, 200, 16
+    keys = jax.random.split(jax.random.PRNGKey(11), R)
+    res = run_monte_carlo(
+        _loss, jnp.zeros((D,)), data.X, data.y, n_workers=N,
+        controller=FixedKController(n_workers=N, k=1),
+        straggler=Exponential(rate=rate), eta=eta, num_iters=U,
+        keys=keys, eval_every=1, mode="kasync",
+    )
+    times = np.asarray(res.time, np.float64)  # (R, U) update times
+    engine_gaps = np.diff(np.concatenate([np.zeros((R, 1)), times], axis=1), axis=1)
+    engine_gaps = engine_gaps.ravel()
+
+    host_gaps = []
+    for seed in range(2):
+        h = _host_reference(
+            data, eta, Exponential(rate=rate), jax.random.PRNGKey(100 + seed),
+            total_time=float(times.mean(0)[-1]), eval_every=1,
+        )
+        t = np.asarray(h["time"], np.float64)
+        host_gaps.append(np.diff(np.concatenate([[0.0], t])))
+    host_gaps = np.concatenate(host_gaps)
+
+    # Both processes' gaps are iid Exp(n * rate); compare each empirical CDF
+    # to the analytic one, and the two samples to each other.
+    def ks_analytic(x):
+        x = np.sort(x)
+        ecdf = np.arange(1, x.size + 1) / x.size
+        return float(np.max(np.abs(ecdf - (1.0 - np.exp(-N * rate * x)))))
+
+    crit = lambda n: 1.63 / np.sqrt(n)  # ~1% one-sample critical value
+    assert ks_analytic(engine_gaps) < crit(engine_gaps.size)
+    assert ks_analytic(host_gaps) < crit(host_gaps.size)
+    # two-sample KS at ~1%
+    both = np.sort(np.concatenate([engine_gaps, host_gaps]))
+    f1 = np.searchsorted(np.sort(engine_gaps), both, side="right") / engine_gaps.size
+    f2 = np.searchsorted(np.sort(host_gaps), both, side="right") / host_gaps.size
+    d = float(np.max(np.abs(f1 - f2)))
+    n1, n2 = engine_gaps.size, host_gaps.size
+    assert d < 1.628 * np.sqrt((n1 + n2) / (n1 * n2)), d
+    # losses at matched update counts agree in distribution-level terms too:
+    # same law, so the replica-mean final loss must bracket the host's.
+    final_engine = float(np.mean(np.asarray(res.loss)[:, -1]))
+    ne = min(len(h["loss"]), U)
+    final_host = float(np.asarray(h["loss"])[ne - 1])
+    assert abs(np.log(final_engine) - np.log(final_host)) < 1.0
+
+
+def test_kasync_k_equals_n_degenerates_to_sync(linreg):
+    """K = n: every event is 'all workers complete', snapshots never go
+    stale, and the renewal step IS the k=n sync step (same draws, X_(n)
+    event times) — trajectories match the sync engine to f32 noise (the
+    stale-gradient stack sums per-shard partials in a different reduction
+    order than the full-batch gradient, so last-ulp equality is not
+    guaranteed)."""
+    data, eta = linreg
+    keys = jax.random.split(jax.random.PRNGKey(5), 3)
+    kw = dict(n_workers=N, controller=FixedKController(n_workers=N, k=N),
+              straggler=Exponential(rate=1.0), eta=eta, num_iters=80,
+              keys=keys, eval_every=20)
+    sync = run_monte_carlo(_loss, jnp.zeros((D,)), data.X, data.y, mode="sync", **kw)
+    kasync = run_monte_carlo(_loss, jnp.zeros((D,)), data.X, data.y, mode="kasync", **kw)
+    np.testing.assert_array_equal(np.asarray(sync.time), np.asarray(kasync.time))
+    np.testing.assert_array_equal(np.asarray(sync.k), np.asarray(kasync.k))
+    np.testing.assert_allclose(
+        np.asarray(sync.loss), np.asarray(kasync.loss), rtol=1e-5
+    )
+
+
+def test_kbatch_fast_worker_fills_the_batch(linreg):
+    """K-batch-async redispatches completers immediately, so one fast worker
+    can supply the whole batch: with a 1-fast/7-slow fleet the kbatch clock
+    must run far ahead of kasync's (which needs K *distinct* workers)."""
+    data, eta = linreg
+    fleet = WorkerFleet(
+        models=(Exponential(rate=50.0),) + (Exponential(rate=0.02),) * (N - 1)
+    )
+    keys = jax.random.split(jax.random.PRNGKey(9), 4)
+    kw = dict(n_workers=N, controller=FixedKController(n_workers=N, k=2),
+              straggler=fleet, eta=eta, num_iters=60, keys=keys, eval_every=30)
+    kb = run_monte_carlo(_loss, jnp.zeros((D,)), data.X, data.y, mode="kbatch", **kw)
+    ka = run_monte_carlo(_loss, jnp.zeros((D,)), data.X, data.y, mode="kasync", **kw)
+    assert float(np.mean(np.asarray(kb.time)[:, -1])) < 0.1 * float(
+        np.mean(np.asarray(ka.time)[:, -1])
+    )
+
+
+# ----------------------------- staleness / ExecStats controller plumbing
+
+
+class _ProbeState(NamedTuple):
+    k: jax.Array
+    stale_seen: jax.Array
+
+
+class _StalenessProbe:
+    """Minimal staleness-aware policy: k = 1 until a stale gradient is ever
+    applied, then 2 — observable through the recorded k trajectory."""
+
+    n_workers = N
+
+    def init(self, params_like):
+        del params_like
+        return _ProbeState(
+            k=jnp.asarray(1, jnp.int32), stale_seen=jnp.asarray(False)
+        )
+
+    def update(self, state, grads, sim_time, stats=None):
+        del grads, sim_time
+        # The lean sync program keeps the historical 3-argument call.
+        stale = jnp.asarray(0, jnp.int32) if stats is None else stats.max_staleness
+        seen = state.stale_seen | (stale > 0)
+        k = jnp.where(seen, 2, 1).astype(jnp.int32)
+        return _ProbeState(k=k, stale_seen=seen), k
+
+
+def test_exec_stats_reach_the_controller(linreg):
+    """In kasync mode gradients DO go stale at k=1 (non-arrivals age), so
+    the probe must switch to k=2; in sync mode staleness is identically
+    zero and it must not."""
+    data, eta = linreg
+    key = jax.random.PRNGKey(2)
+    kw = dict(n_workers=N, controller=_StalenessProbe(),
+              straggler=Exponential(rate=1.0), eta=eta, num_iters=40,
+              keys=key[None], eval_every=40)
+    ka = run_monte_carlo(_loss, jnp.zeros((D,)), data.X, data.y, mode="kasync", **kw)
+    assert int(ka.k[0, -1]) == 2
+    sync = run_monte_carlo(_loss, jnp.zeros((D,)), data.X, data.y, mode="sync", **kw)
+    assert int(sync.k[0, -1]) == 1
+
+
+# ------------------------------------- sweep engine: mode as a grid leaf
+
+
+def _assert_cell_bitwise(res, g, ref, label):
+    for name in ("time", "loss", "k"):
+        a = np.asarray(getattr(res, name)[g])
+        b = np.asarray(getattr(ref, name))
+        assert np.array_equal(a, b), f"cell {label} {name} differs from looped engine"
+
+
+def test_mixed_mode_grid_bitwise_vs_looped_and_no_retrace(linreg):
+    """A sync + kasync + kbatch grid (incl. a hetero fleet cell and a comm
+    model) as ONE dispatch: every cell bitwise-equal to the looped
+    ``run_monte_carlo(mode=...)`` ground truth.  The sync cell runs through
+    the new ExecCarry program and must STILL be bitwise-equal to the
+    pre-refactor engine (= the unchanged ``mode="sync"`` looped path).
+    Repopulating an equally-shaped mixed grid must not retrace."""
+    data, eta = linreg
+    keys = jax.random.split(jax.random.PRNGKey(7), 4)
+    fleet = WorkerFleet(
+        models=(Exponential(rate=1.0),) * 4 + (Exponential(rate=0.25),) * 2,
+        schedule=RateSchedule(times=(5.0,), scales=(0.5,)),
+    )
+    cases = [
+        SweepCase(PflugController(n_workers=N, k0=2, step=2, thresh=5, burnin=10),
+                  Exponential(rate=1.0), eta, label="sync_pflug"),
+        SweepCase(FixedKController(n_workers=N, k=2), Exponential(rate=1.0), eta,
+                  label="kasync_k2", mode="kasync"),
+        SweepCase(FixedKController(n_workers=N, k=3), Pareto(x_m=0.5, alpha=1.5),
+                  eta, comm=CommModel(alpha=0.1, beta=0.02),
+                  label="kbatch_k3_comm", mode="kbatch"),
+        SweepCase(FixedKController(n_workers=6, k=2), fleet, eta,
+                  label="kasync_hetero_n6", mode="kasync"),
+    ]
+    res = run_sweep(_loss, jnp.zeros((D,)), data.X, data.y, n_workers=N,
+                    cases=cases, num_iters=120, keys=keys, eval_every=40)
+    for g, c in enumerate(cases):
+        ref = run_monte_carlo(
+            _loss, jnp.zeros((D,)), data.X, data.y, n_workers=N,
+            controller=c.controller, straggler=c.straggler, eta=c.eta,
+            comm=c.comm, num_iters=120, keys=keys, eval_every=40, mode=c.mode,
+        )
+        _assert_cell_bitwise(res, g, ref, c.label)
+
+    before = sweep_cache_stats()["traces"]
+    cases2 = [
+        SweepCase(FixedKController(n_workers=N, k=4), Pareto(), eta, label="s"),
+        SweepCase(PflugController(n_workers=N, k0=1, step=1, thresh=3),
+                  Exponential(rate=0.5), eta, label="a", mode="kasync"),
+        SweepCase(FixedKController(n_workers=N, k=2), Exponential(rate=2.0), eta,
+                  label="b", mode="kbatch"),
+        SweepCase(FixedKController(n_workers=N, k=1), Exponential(rate=1.0), eta,
+                  label="c", mode="kasync"),
+    ]
+    res2 = run_sweep(_loss, jnp.zeros((D,)), data.X, data.y, n_workers=N,
+                     cases=cases2, num_iters=120, keys=keys, eval_every=40)
+    assert sweep_cache_stats()["traces"] == before, "same-shape mixed grid retraced"
+    ref = run_monte_carlo(
+        _loss, jnp.zeros((D,)), data.X, data.y, n_workers=N,
+        controller=cases2[1].controller, straggler=cases2[1].straggler,
+        eta=eta, num_iters=120, keys=keys, eval_every=40, mode="kasync",
+    )
+    _assert_cell_bitwise(res2, 1, ref, "a")
+
+
+def test_all_sync_grid_keeps_lean_program(linreg):
+    """A grid with no async cell must NOT pay for the mode machinery: it
+    compiles under a different cache entry than a mixed grid of the same
+    shape (the lean pre-mode program), and its cells stay bitwise-equal to
+    the looped engine as before."""
+    data, eta = linreg
+    keys = jax.random.split(jax.random.PRNGKey(1), 2)
+    kw = dict(n_workers=N, num_iters=40, keys=keys, eval_every=20)
+    sync_cases = [
+        SweepCase(FixedKController(n_workers=N, k=2), Exponential(), eta, label="x")
+    ]
+    res = run_sweep(_loss, jnp.zeros((D,)), data.X, data.y, cases=sync_cases, **kw)
+    before = sweep_cache_stats()["traces"]
+    mixed = [
+        SweepCase(FixedKController(n_workers=N, k=2), Exponential(), eta,
+                  label="x", mode="kasync")
+    ]
+    run_sweep(_loss, jnp.zeros((D,)), data.X, data.y, cases=mixed, **kw)
+    assert sweep_cache_stats()["traces"] == before + 1, (
+        "sync-only and mode-capable programs must be distinct cache entries"
+    )
+    ref = run_monte_carlo(
+        _loss, jnp.zeros((D,)), data.X, data.y, n_workers=N,
+        controller=sync_cases[0].controller, straggler=Exponential(), eta=eta,
+        num_iters=40, keys=keys, eval_every=20,
+    )
+    _assert_cell_bitwise(res, 0, ref, "x")
+
+
+def test_sweep_rejects_unknown_mode(linreg):
+    data, eta = linreg
+    with pytest.raises(ValueError, match="unknown mode"):
+        run_sweep(_loss, jnp.zeros((D,)), data.X, data.y, n_workers=N,
+                  cases=[SweepCase(FixedKController(n_workers=N, k=1),
+                                   Exponential(), eta, mode="warp")],
+                  num_iters=10, key=jax.random.PRNGKey(0), n_replicas=2)
+
+
+def test_run_monte_carlo_rejects_unknown_mode(linreg):
+    data, eta = linreg
+    with pytest.raises(ValueError, match="unknown mode"):
+        run_monte_carlo(_loss, jnp.zeros((D,)), data.X, data.y, n_workers=N,
+                        controller=FixedKController(n_workers=N, k=1),
+                        straggler=Exponential(), eta=eta, num_iters=10,
+                        key=jax.random.PRNGKey(0), n_replicas=2, mode="warp")
+
+
+# -------------------------------------- WorkerFleet misuse + hetero async
+
+
+def test_workerfleet_misuse_errors(linreg):
+    data, eta = linreg
+    fleet3 = WorkerFleet(models=(Exponential(1.0),) * 3)
+    # more active models than engine slots
+    with pytest.raises(ValueError, match="active workers > 2 slots"):
+        pack_params_per_worker(fleet3, 2)
+    # n_active disagreeing with the fleet's model count
+    with pytest.raises(ValueError, match="n_active=2 but fleet has 3"):
+        pack_params_per_worker(fleet3, 4, n_active=2)
+    # controller sized to a different worker count than the fleet
+    with pytest.raises(ValueError, match="controller.n_workers"):
+        run_monte_carlo(_loss, jnp.zeros((D,)), data.X, data.y, n_workers=N,
+                        controller=FixedKController(n_workers=N, k=1),
+                        straggler=fleet3, eta=eta, num_iters=10,
+                        key=jax.random.PRNGKey(0), n_replicas=2, mode="kasync")
+    # schedule drifting a parameter column that does not exist
+    with pytest.raises(ValueError, match="leaf 7 outside"):
+        RateSchedule(times=(1.0,), scales=(0.5,), leaf=7)
+    # mismatched knot vectors and unsorted times
+    with pytest.raises(ValueError, match="2 times vs 1 scales"):
+        RateSchedule(times=(1.0, 2.0), scales=(0.5,))
+    with pytest.raises(ValueError, match="non-decreasing"):
+        RateSchedule(times=(2.0, 1.0), scales=(0.5, 0.4))
+    # fleets of non-sweepable models are rejected up front
+    class Alien:
+        pass
+    with pytest.raises(ValueError, match="not sweepable"):
+        WorkerFleet(models=(Exponential(1.0), Alien()))
+
+
+@pytest.mark.parametrize("mode", ["kasync", "kbatch"])
+def test_hetero_fleet_async_inactive_slots_never_dispatched(linreg, mode):
+    """With n_active < n_slots the padded slots carry +inf clocks: were one
+    ever dispatched into an arrival set, the event time — and every
+    sim_time after it — would be +inf.  All times must stay finite and the
+    active-worker loss must keep improving."""
+    data, eta = linreg
+    n_active = 5
+    fleet = WorkerFleet(
+        models=(Exponential(rate=1.0),) * 3 + (Exponential(rate=0.3),) * 2
+    )
+    keys = jax.random.split(jax.random.PRNGKey(4), 3)
+    res = run_monte_carlo(
+        _loss, jnp.zeros((D,)), data.X, data.y, n_workers=N,
+        controller=FixedKController(n_workers=n_active, k=2),
+        straggler=fleet, eta=eta, num_iters=200, keys=keys, eval_every=50,
+        mode=mode,
+    )
+    t = np.asarray(res.time)
+    l = np.asarray(res.loss)
+    assert np.all(np.isfinite(t)) and np.all(np.isfinite(l))
+    assert np.all(np.diff(t, axis=1) > 0)
+    assert float(l[:, -1].mean()) < float(l[:, 0].mean())
+
+
+# ------------------------------------------------- chunk deprecation
+
+
+def test_simulate_fastest_k_chunk_deprecated_once(linreg):
+    data, eta = linreg
+    common = dict(n_workers=N, controller=FixedKController(n_workers=N, k=2),
+                  straggler=Exponential(rate=1.0), eta=eta,
+                  key=jax.random.PRNGKey(0), num_iters=10, eval_every=5)
+    with pytest.warns(DeprecationWarning, match="chunk"):
+        simulate_fastest_k(_loss, jnp.zeros((D,)), data.X, data.y,
+                           chunk=50, **common)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        simulate_fastest_k(_loss, jnp.zeros((D,)), data.X, data.y,
+                           chunk=50, **common)
+    assert not [w for w in caught if issubclass(w.category, DeprecationWarning)], (
+        "chunk deprecation must only warn once"
+    )
+    # and the async modes ride through the wrapper
+    h = simulate_fastest_k(_loss, jnp.zeros((D,)), data.X, data.y,
+                           mode="kasync", **common)
+    assert len(h["time"]) == 2
