@@ -2,16 +2,33 @@
 committed baseline (``BENCH_sweep.json`` at the repo root).
 
     python benchmarks/check_bench.py CURRENT BASELINE [--max-ratio 1.5]
+                                     [--min-warm-speedup 1.0]
                                      [--min-async-speedup 5.0]
 
-The comparison is on the **warm** single-dispatch time (``sweep_s.warm``) —
-the number a hot-path or program-cache regression moves first (a
-retrace-per-call bug turns warm into cold, a 2-10x jump).
+Three rules:
 
-The record's ``async`` section (jitted K-async engine vs the event-driven
-host loop, per update) is gated absolutely: ``speedup_per_update`` below
-``--min-async-speedup`` (default 5x) fails — the jitted renewal engine
-regressing to host-loop-like throughput means its scan hot path broke.
+* **Warm-time ceiling** (baseline-relative): the fresh record's warm
+  single-dispatch time (``sweep_s.warm``) must not exceed ``--max-ratio``
+  x the baseline's — the number a hot-path or program-cache regression
+  moves first (a retrace-per-call bug turns warm into cold, a 2-10x jump).
+* **Warm-speedup floor** (within the fresh record): the cache-hot sweep
+  must beat the cache-hot looped engine — ``looped_s.warm / sweep_s.warm``
+  >= ``--min-warm-speedup`` (default 1.0).  This is the
+  branch-signature-specialization guarantee: the single-dispatch engine
+  wins warm, not just cold.  Pass ``--min-warm-speedup 0`` to disable
+  (CI does this for the ``--no-specialize`` record, whose all-branch
+  program is not expected to beat the loop).
+* **Async floor** (absolute): the record's ``async`` section (jitted
+  K-async engine vs the event-driven host loop, per update) must show
+  ``speedup_per_update`` >= ``--min-async-speedup`` (default 5x) — the
+  jitted renewal engine regressing to host-loop-like throughput means its
+  scan hot path broke.
+
+File hygiene: the **repo-root** ``BENCH_sweep.json`` is the committed
+full-grid baseline; ``results/BENCH_sweep.json`` is scratch output of the
+latest bench run.  Pointing the BASELINE argument at the scratch copy (or
+at the CURRENT file itself, or at any smoke record) silently gates against
+the wrong numbers, so those mistakes are hard errors here.
 
 * Same-shape records (equal smoke flag / n_cells / num_iters / n_replicas):
   direct ratio, fail above ``--max-ratio``.
@@ -20,13 +37,15 @@ regressing to host-loop-like throughput means its scan hot path broke.
   its warm time exceeding ``max-ratio`` x the full-grid warm time can only
   mean a catastrophic regression — that ceiling is what CI enforces.
 
-Exit status 0 = within budget, 1 = regression (message on stderr).
+Exit status 0 = within budget, 1 = regression (message on stderr),
+2 = wrong files (message on stderr).
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 
@@ -39,9 +58,41 @@ def _shape(rec: dict) -> tuple:
     )
 
 
+def baseline_path_error(current_path: str, baseline_path: str) -> str | None:
+    """Catch the root-vs-results mixups before any numeric comparison."""
+    cur = os.path.realpath(current_path)
+    base = os.path.realpath(baseline_path)
+    if cur == base:
+        return (
+            f"current and baseline are the same file ({base}): compare the "
+            "fresh results/BENCH_sweep.json against the committed repo-root "
+            "BENCH_sweep.json, not against itself"
+        )
+    if os.path.basename(os.path.dirname(base)) == "results":
+        return (
+            f"baseline points into a results/ directory ({baseline_path}): "
+            "results/BENCH_sweep.json is the scratch output of the latest "
+            "bench run, not the committed baseline — pass the repo-root "
+            "BENCH_sweep.json instead"
+        )
+    return None
+
+
+def baseline_record_error(baseline: dict) -> str | None:
+    if baseline.get("smoke"):
+        return (
+            "baseline record has smoke=true: smoke records are CI scratch "
+            "output, never the committed baseline — regenerate the full-grid "
+            "record (PYTHONPATH=src python benchmarks/sweep_bench.py) and "
+            "commit it to the repo root"
+        )
+    return None
+
+
 def check(
     current: dict, baseline: dict, max_ratio: float,
     min_async_speedup: float = 5.0,
+    min_warm_speedup: float = 1.0,
 ) -> str | None:
     """Returns an error message, or None when the current record passes."""
     cur_warm = current["sweep_s"]["warm"]
@@ -60,6 +111,18 @@ def check(
         )
     if not current.get("bitwise_equal", False):
         return "current record reports bitwise_equal=false vs the looped engine"
+    looped_warm = current.get("looped_s", {}).get("warm", 0.0)
+    if cur_warm <= 0:
+        return f"current warm time is non-positive ({cur_warm})"
+    warm_speedup = looped_warm / cur_warm
+    if warm_speedup < min_warm_speedup:
+        return (
+            f"warm sweep ({cur_warm:.3f}s) is only {warm_speedup:.2f}x the "
+            f"warm looped engine ({looped_warm:.3f}s); floor "
+            f"{min_warm_speedup}x — branch-signature specialization should "
+            "make the single dispatch win warm (a signature-cache or "
+            "branch-pruning regression shows up here first)"
+        )
     async_rec = current.get("async")
     if async_rec is None:
         return "current record has no 'async' section (engine-vs-host-loop)"
@@ -75,26 +138,44 @@ def check(
         )
     print(
         f"check_bench OK: warm {cur_warm:.3f}s vs baseline {base_warm:.3f}s "
-        f"({ratio:.2f}x, {kind}, limit {max_ratio}x); async engine "
-        f"{async_speedup:.0f}x host loop (floor {min_async_speedup}x)"
+        f"({ratio:.2f}x, {kind}, limit {max_ratio}x); warm sweep "
+        f"{warm_speedup:.2f}x warm looped (floor {min_warm_speedup}x); "
+        f"async engine {async_speedup:.0f}x host loop "
+        f"(floor {min_async_speedup}x)"
     )
     return None
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("current", help="freshly produced BENCH_sweep.json")
-    ap.add_argument("baseline", help="committed baseline BENCH_sweep.json")
+    ap.add_argument("current", help="freshly produced BENCH_sweep.json "
+                                    "(typically results/BENCH_sweep.json)")
+    ap.add_argument("baseline", help="committed baseline BENCH_sweep.json "
+                                     "(the repo-root copy)")
     ap.add_argument("--max-ratio", type=float, default=1.5)
+    ap.add_argument("--min-warm-speedup", type=float, default=1.0,
+                    help="floor on looped_s.warm / sweep_s.warm within the "
+                         "current record (warm single dispatch must beat the "
+                         "warm loop); 0 disables — use for --no-specialize "
+                         "records")
     ap.add_argument("--min-async-speedup", type=float, default=5.0,
                     help="floor on async.speedup_per_update (engine vs "
                          "host loop); absolute, not baseline-relative")
     args = ap.parse_args()
+    err = baseline_path_error(args.current, args.baseline)
+    if err:
+        print(f"check_bench WRONG FILES: {err}", file=sys.stderr)
+        sys.exit(2)
     with open(args.current) as f:
         current = json.load(f)
     with open(args.baseline) as f:
         baseline = json.load(f)
-    err = check(current, baseline, args.max_ratio, args.min_async_speedup)
+    err = baseline_record_error(baseline)
+    if err:
+        print(f"check_bench WRONG FILES: {err}", file=sys.stderr)
+        sys.exit(2)
+    err = check(current, baseline, args.max_ratio, args.min_async_speedup,
+                args.min_warm_speedup)
     if err:
         print(f"check_bench FAIL: {err}", file=sys.stderr)
         sys.exit(1)

@@ -65,9 +65,11 @@ __all__ = [
     "MODE_KBATCH",
     "ExecStats",
     "ExecCarry",
+    "ModePrelude",
     "zero_stats",
     "init_exec_carry",
     "make_stale_grad_fns",
+    "make_mode_prelude_and_tails",
     "make_mode_steps",
 ]
 
@@ -180,62 +182,101 @@ def make_stale_grad_fns(per_example_loss_fn: Callable, Xw, yw, n_slots: int):
     return stale_grad, shard_grad_at
 
 
-def make_mode_steps(
+class ModePrelude(NamedTuple):
+    """Mode-invariant per-event work, hoisted out of the mode switch.
+
+    Every field is computed identically by each mode that consumes it (the
+    sync/kasync pair consumes all of them; kbatch only ``new_key``/``sub``/
+    ``k``), so in a mixed-mode grid the per-cell ``lax.switch`` selects only
+    the cheap mode *bookkeeping* tails — per-slot sampling, ranking, and the
+    order statistic are traced once per event instead of once per branch.
+    For a sync-mode cell ``pending`` is identically False, so ``remaining``
+    is the fresh draw bit for bit — which is exactly what keeps hoisting a
+    bitwise no-op for sync lanes.
+    """
+
+    new_key: jax.Array  # next carry key (first output of the split)
+    sub: jax.Array  # this event's subkey (kbatch's key0)
+    k: jax.Array  # the controller's current k/K
+    remaining: jax.Array  # (n_slots,) residual clocks after renewal
+    arrive_f: jax.Array  # f32 mask of the K smallest clocks
+    tau: jax.Array  # K-th order statistic of the clocks
+    t_iter: jax.Array  # tau + master-side comm
+
+
+def make_mode_prelude_and_tails(
     *,
     n_slots: int,
     draw: Callable,  # draw(sub, sim_time) -> (n_slots,) fresh task durations
     sync_grad: Callable,  # sync_grad(params, mask, k) -> grad pytree (eq. 2)
     stale_grad: Callable,  # stale_grad(worker_params, mask_f32, k) -> grad pytree
     shard_grad_at: Callable,  # shard_grad_at(worker_params, i) -> worker i's partial grad
-    comm_time: Callable,  # comm_time(k) -> f32 master-side receive cost
+    comm_time: Callable | None,  # comm_time(k) -> f32 receive cost; None = no comm
     eta,  # f32 scalar (python float or traced leaf)
     ctrl_update: Callable,  # ctrl_update(state, g, sim_time, stats) -> (state, k)
     ctrl_k: Callable = lambda s: s.k,  # current K from the controller state
 ):
-    """The three execution-mode step functions over a shared ``ExecCarry``.
+    """The execution modes factored as (shared prelude, per-mode tails).
 
-    Each returns ``(new_carry, k)`` with identical pytree structure, so a
-    per-cell ``lax.switch`` over them vmaps cleanly.  All leaves the caller
-    closes over (straggler rows, eta, comm, controller hyperparameters) may
-    be traced — the functions contain no value-dependent Python branching.
+    ``prelude(carry)`` performs the mode-invariant work (key split, fresh
+    per-slot draw, renewal residuals, fastest-K ranking/order statistic,
+    comm); ``tails[mode](carry, prelude)`` each return ``(new_carry, k)``
+    with identical pytree structure, so a per-cell ``lax.switch`` over the
+    tails vmaps cleanly.  ``tails[mode](carry, prelude(carry))`` is exactly
+    the historical full step for that mode, op for op — callers that trace a
+    single mode (``make_mode_steps``) and callers that switch over tails
+    behind one shared prelude (the sweep engine) therefore stay
+    bitwise-identical per cell.
+
+    ``comm_time=None`` statically omits the master-side receive cost
+    (arithmetically ``+ 0.0`` everywhere it would appear — a bitwise no-op
+    versus a zero ``CommModel``).  All leaves the caller closes over
+    (straggler rows, eta, comm, controller hyperparameters) may be traced —
+    nothing here branches on values in Python.
     """
 
-    def sync_step(carry: ExecCarry):
-        # Pre-refactor arithmetic, op for op: fresh draw -> fastest-k mask +
-        # order statistic -> eq.-(2) gradient at the master's params.  The
-        # async carry fields pass through untouched (bitwise identity).
-        new_key, sub = jax.random.split(carry.key)
-        k = ctrl_k(carry.ctrl_state)
-        times = draw(sub, carry.sim_time)
-        mask, t_iter = aggregation.fastest_k_mask_time(times, k)
-        t_iter = t_iter + comm_time(k)
-        g = sync_grad(carry.params, mask, k)
-        params = jax.tree.map(lambda p, gi: p - eta * gi, carry.params, g)
-        sim_time = carry.sim_time + t_iter
-        ctrl_state, _ = ctrl_update(carry.ctrl_state, g, sim_time, zero_stats(k))
-        return (
-            carry._replace(
-                params=params, ctrl_state=ctrl_state, sim_time=sim_time, key=new_key
-            ),
-            k,
-        )
-
-    def kasync_step(carry: ExecCarry):
-        # One master event: the next K completions arrive, their stale
-        # partial gradients (at their dispatch snapshots) are averaged and
-        # applied, and exactly those K workers redispatch from the new model.
+    def prelude(carry: ExecCarry) -> ModePrelude:
         new_key, sub = jax.random.split(carry.key)
         k = ctrl_k(carry.ctrl_state)
         remaining = renewal_remaining(
             draw(sub, carry.sim_time), carry.pending, carry.remaining
         )
-        # The sync hot-path primitive, reread over residual clocks: arrival
-        # set = the K smallest clocks, event duration = the K-th one.
+        # The sync hot-path primitive, read over residual clocks: arrival
+        # set = the K smallest clocks, event duration = the K-th one.  (For
+        # sync cells the clocks ARE the fresh draw — pending is never set.)
         arrive_f, tau = aggregation.fastest_k_mask_time(remaining, k)
+        t_iter = tau if comm_time is None else tau + comm_time(k)
+        return ModePrelude(
+            new_key=new_key, sub=sub, k=k, remaining=remaining,
+            arrive_f=arrive_f, tau=tau, t_iter=t_iter,
+        )
+
+    def sync_tail(carry: ExecCarry, p: ModePrelude):
+        # Pre-refactor arithmetic, op for op: fastest-k mask + order
+        # statistic -> eq.-(2) gradient at the master's params.  The async
+        # carry fields pass through untouched (bitwise identity).
+        k = p.k
+        g = sync_grad(carry.params, p.arrive_f, k)
+        params = jax.tree.map(lambda pa, gi: pa - eta * gi, carry.params, g)
+        sim_time = carry.sim_time + p.t_iter
+        ctrl_state, _ = ctrl_update(carry.ctrl_state, g, sim_time, zero_stats(k))
+        return (
+            carry._replace(
+                params=params, ctrl_state=ctrl_state, sim_time=sim_time,
+                key=p.new_key,
+            ),
+            k,
+        )
+
+    def kasync_tail(carry: ExecCarry, p: ModePrelude):
+        # One master event: the next K completions arrive, their stale
+        # partial gradients (at their dispatch snapshots) are averaged and
+        # applied, and exactly those K workers redispatch from the new model.
+        new_key, k = p.new_key, p.k
+        remaining, arrive_f, t_iter = p.remaining, p.arrive_f, p.t_iter
         arrive = arrive_f.astype(bool)
-        t_iter = tau + comm_time(k)
         g = stale_grad(carry.worker_params, arrive_f, k)
-        params = jax.tree.map(lambda p, gi: p - eta * gi, carry.params, g)
+        params = jax.tree.map(lambda pa, gi: pa - eta * gi, carry.params, g)
         sim_time = carry.sim_time + t_iter
         kf = k.astype(jnp.float32)
         stats = ExecStats(
@@ -247,7 +288,7 @@ def make_mode_steps(
         # Arrivals redispatch from the fresh model (clock drawn next event);
         # everyone else keeps computing, one update staler.
         worker_params = jax.tree.map(
-            lambda wp, p: jnp.where(_slot_bcast(arrive, wp), p[None], wp),
+            lambda wp, pa: jnp.where(_slot_bcast(arrive, wp), pa[None], wp),
             carry.worker_params,
             params,
         )
@@ -272,7 +313,7 @@ def make_mode_steps(
             k,
         )
 
-    def kbatch_step(carry: ExecCarry):
+    def kbatch_tail(carry: ExecCarry, p: ModePrelude):
         # One master event: K single completions in a row — each completer
         # contributes its stale partial gradient and redispatches IMMEDIATELY
         # (reading the still-pre-update params), so a fast worker can land
@@ -283,11 +324,13 @@ def make_mode_steps(
         # costs n_slots shard gradients (~ one full-batch gradient)
         # regardless of K.  A static K bound could shorten the scan, but
         # only by restructuring key consumption identically in both engines
-        # (the bitwise sweep-vs-looped pin).
-        new_key, key0 = jax.random.split(carry.key)
-        k = ctrl_k(carry.ctrl_state)
+        # (the bitwise sweep-vs-looped pin).  Only the prelude's key split
+        # and k are consumed here: kbatch events draw per completion from a
+        # second-level split, so the hoisted draw/ranking belong to the
+        # other modes (they fold away in a kbatch-only program).
+        new_key, k = p.new_key, p.k
         kf = k.astype(jnp.float32)
-        key0, sub0 = jax.random.split(key0)
+        key0, sub0 = jax.random.split(p.sub)
         remaining = renewal_remaining(
             draw(sub0, carry.sim_time), carry.pending, carry.remaining
         )
@@ -338,8 +381,8 @@ def make_mode_steps(
             jax.lax.scan(inner, init, jnp.arange(n_slots))
         )
         g = jax.tree.map(lambda x: x / kf, gsum)
-        params = jax.tree.map(lambda p, gi: p - eta * gi, carry.params, g)
-        t_iter = tau_sum + comm_time(k)
+        params = jax.tree.map(lambda pa, gi: pa - eta * gi, carry.params, g)
+        t_iter = tau_sum if comm_time is None else tau_sum + comm_time(k)
         sim_time = carry.sim_time + t_iter
         stats = ExecStats(
             arrivals=jnp.asarray(k, jnp.int32),
@@ -351,8 +394,12 @@ def make_mode_steps(
             ExecCarry(
                 params=params,
                 # Carried clocks also run through the master's receive
-                # window (comm = 0 keeps this a bitwise no-op; see kasync).
-                remaining=jnp.maximum(remaining - comm_time(k), 0.0),
+                # window (comm = 0, or no comm model at all, keeps this a
+                # bitwise no-op; see kasync).
+                remaining=(
+                    remaining if comm_time is None
+                    else jnp.maximum(remaining - comm_time(k), 0.0)
+                ),
                 worker_params=worker_params,
                 # The update just applied ages every in-flight task by one.
                 staleness=staleness + 1,
@@ -364,4 +411,35 @@ def make_mode_steps(
             k,
         )
 
-    return sync_step, kasync_step, kbatch_step
+    return prelude, (sync_tail, kasync_tail, kbatch_tail)
+
+
+def make_mode_steps(
+    *,
+    n_slots: int,
+    draw: Callable,
+    sync_grad: Callable,
+    stale_grad: Callable,
+    shard_grad_at: Callable,
+    comm_time: Callable | None,
+    eta,
+    ctrl_update: Callable,
+    ctrl_k: Callable = lambda s: s.k,
+):
+    """The three full execution-mode step functions over a shared ``ExecCarry``.
+
+    ``step(carry) -> (new_carry, k)`` — each is its mode's tail composed
+    with the shared prelude (``make_mode_prelude_and_tails``); tracing one
+    of them (the looped per-cell engines) and tracing the tails behind one
+    hoisted prelude (the sweep's mixed-mode programs) therefore produce
+    bitwise-identical trajectories per cell.  Prelude fields a mode does not
+    consume fold away when that mode is traced alone.
+    """
+    prelude, tails = make_mode_prelude_and_tails(
+        n_slots=n_slots, draw=draw, sync_grad=sync_grad, stale_grad=stale_grad,
+        shard_grad_at=shard_grad_at, comm_time=comm_time, eta=eta,
+        ctrl_update=ctrl_update, ctrl_k=ctrl_k,
+    )
+    return tuple(
+        (lambda carry, _tail=tail: _tail(carry, prelude(carry))) for tail in tails
+    )

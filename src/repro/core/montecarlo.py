@@ -184,6 +184,12 @@ def _build_program(
 
             def draw(sub, sim_time, k):
                 pm = apply_rate_schedule(pmat, *sched, sim_time)
+                # Deliberately the FULL family sampler, never restricted to
+                # the fleet's own families: the sampler subgraph must be
+                # structurally identical to the sweep engine's, because XLA
+                # CPU compiles structurally different sampler graphs with
+                # last-ulp differences in the response-time chain (see
+                # GridSignature's docstring in repro.core.sweep).
                 times = sample_times_per_worker(kinds, pm, sub)
                 mask, t = aggregation.fastest_k_mask_time(times, k)
                 if comm is not None:
@@ -306,6 +312,8 @@ def _build_async_program(
 
             def draw(sub, sim_time):
                 pm = apply_rate_schedule(pmat, *sched, sim_time)
+                # Full sampler, never family-restricted (see the sync
+                # builder's draw note).
                 return sample_times_per_worker(kinds, pm, sub)
 
             def mean_loss(params):
@@ -331,10 +339,9 @@ def _build_async_program(
             per_example_loss_fn, Xw, yw, n_workers
         )
 
-        if comm is not None:
-            comm_time = comm.time
-        else:
-            comm_time = lambda k: jnp.asarray(0.0, jnp.float32)  # noqa: E731
+        # comm=None statically omits the receive-cost adds (a bitwise no-op
+        # versus adding a zero CommModel's 0.0 — see make_mode_prelude_and_tails).
+        comm_time = comm.time if comm is not None else None
 
         def ctrl_update(state, g, sim_time, stats):
             if accepts_stats:

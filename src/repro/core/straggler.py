@@ -16,7 +16,7 @@ stays a single compiled program.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +39,8 @@ __all__ = [
     "pack_params_per_worker",
     "pack_schedule",
     "family_index",
+    "family_select_masks",
+    "sample_times_selected",
     "sample_times_per_worker",
     "schedule_multiplier",
     "apply_rate_schedule",
@@ -48,41 +50,108 @@ __all__ = [
 # Packed-parameter protocol (used by repro.core.sweep and the heterogeneous
 # path of repro.core.montecarlo): every family exposes
 #
-#   ``_sample_packed(key, n, p)``      — p a (N_STRAGGLER_PARAMS,) f32 vector,
-#   ``_sample_packed_rows(key, pmat)`` — pmat a (n, N_STRAGGLER_PARAMS) f32
-#                                        *per-worker* parameter matrix,
+#   ``_from_base(base, p)``            — cheap elementwise transform of the
+#                                        shared ``_BaseDraws`` (see below); p
+#                                        is a (N_STRAGGLER_PARAMS,) f32 vector
+#                                        or an (n, N_STRAGGLER_PARAMS) f32
+#                                        per-worker matrix (indexed p[..., j]),
+#   ``_sample_packed(key, n, p)``      — scalar-parameter convenience wrapper,
+#   ``_sample_packed_rows(key, pmat)`` — per-worker-row convenience wrapper,
 #
-# and ``sample`` delegates to the scalar form.  Both forms draw their base
-# randomness identically (one key, shape (n,)) and differ only in whether the
-# parameter transform broadcasts a scalar or applies elementwise per row, so
-# a matrix whose rows all equal ``p`` is **bitwise-equal** to the scalar path
-# — the invariant that lets homogeneous grids keep their pre-heterogeneity
+# and ``sample`` delegates to the scalar form.
+#
+# Base randomness is SHARED across families: one key split yields a primary
+# uniform ``u`` (shape (n,)) and — only when a two-draw family is in play —
+# a secondary uniform ``v``; every family is an inverse-CDF (or mixture-
+# select) transform of those.  Because each worker slot realizes exactly one
+# family, cross-family correlation through the shared ``u`` is unobservable:
+# per-slot marginals are exact.  What the sharing buys is the sweep engine's
+# hot path — selecting among ``len(families)`` cheap transforms of ONE base
+# draw instead of running every family's full sampler per iteration.
+#
+# Both wrapper forms draw the base identically (same key split, shape (n,)),
+# and the transform broadcasts a scalar or applies elementwise per row, so a
+# matrix whose rows all equal ``p`` is **bitwise-equal** to the scalar path —
+# the invariant that lets homogeneous grids keep the iid engine's
 # trajectories bit for bit (pinned by tests/test_hetero.py).
 N_STRAGGLER_PARAMS = 3
+
+
+class _BaseDraws(NamedTuple):
+    """Shared base randomness handed to every family's ``_from_base``.
+
+    ``u`` is the primary uniform, ``l = log1p(-u)`` its log factor (the
+    exponential quantile every continuous family transforms), ``v`` the
+    secondary uniform (mixture selectors only; None when no present family
+    needs it).
+    """
+
+    u: jax.Array
+    l: jax.Array
+    v: jax.Array | None
+
+
+def _base_draws(key: jax.Array, n: int, with_secondary: bool) -> _BaseDraws:
+    """The shared base draws every family transform consumes.
+
+    The key is split ONCE regardless of which families are present, so a
+    family's values depend only on (key, n, its own parameters) — never on
+    which other families happen to share the program.  ``v`` is drawn only
+    when a two-draw family (``NEEDS_SECONDARY``) needs it; skipping it does
+    not perturb ``u`` (separate subkey), so single-draw cells are bitwise
+    identical whether or not a Bimodal cell shares their grid.
+
+    ``l`` is computed HERE, once: every continuous family's transform is a
+    cheap function of the same log factor, so the engines' per-iteration
+    sampler is one log1p regardless of how many families a program can
+    select among.
+    """
+    ku, kv = jax.random.split(key)
+    u = jax.random.uniform(ku, (n,), dtype=jnp.float32)
+    l = jnp.log1p(-u)
+    v = jax.random.uniform(kv, (n,), dtype=jnp.float32) if with_secondary else None
+    return _BaseDraws(u=u, l=l, v=v)
 
 
 @dataclasses.dataclass(frozen=True)
 class StragglerModel:
     """Base class: iid worker response times."""
 
+    # True for families whose transform consumes the secondary uniform ``v``
+    # (mixtures needing an independent selector + value draw).
+    NEEDS_SECONDARY = False
+
     def sample(self, key: jax.Array, n: int) -> jax.Array:
         """Draw n iid response times (float32, shape (n,))."""
         return type(self)._sample_packed(key, n, pack_params(self))
 
     @staticmethod
-    def _sample_packed(key: jax.Array, n: int, p: jax.Array) -> jax.Array:
-        """Sample from the packed parameter vector (see N_STRAGGLER_PARAMS)."""
-        raise NotImplementedError
+    def _from_base(base, p) -> jax.Array:
+        """Transform the shared base draws (``_BaseDraws``) into response times.
 
-    @staticmethod
-    def _sample_packed_rows(key: jax.Array, pmat: jax.Array) -> jax.Array:
-        """Per-worker form: row i of pmat parameterizes worker i's draw.
-
-        MUST consume the key exactly as ``_sample_packed`` does (same RNG
-        calls, same shapes) so identical rows reproduce the scalar path
-        bitwise.
+        ``p`` is a (N_STRAGGLER_PARAMS,) vector or an (n, N_STRAGGLER_PARAMS)
+        per-worker matrix — index parameters as ``p[..., j]`` so scalar and
+        per-row forms share the elementwise arithmetic bit for bit.  Apart
+        from Pareto's barriered ``exp`` the transforms are exact (IEEE)
+        elementwise ops, so their bits cannot depend on fusion context.
         """
         raise NotImplementedError
+
+    @classmethod
+    def _sample_packed(cls, key: jax.Array, n: int, p: jax.Array) -> jax.Array:
+        """Sample from the packed parameter vector (see N_STRAGGLER_PARAMS)."""
+        return cls._from_base(_base_draws(key, n, cls.NEEDS_SECONDARY), p)
+
+    @classmethod
+    def _sample_packed_rows(cls, key: jax.Array, pmat: jax.Array) -> jax.Array:
+        """Per-worker form: row i of pmat parameterizes worker i's draw.
+
+        Consumes the key exactly as ``_sample_packed`` does (same split, same
+        base shapes) so identical rows reproduce the scalar path bitwise.
+        """
+        return cls._from_base(
+            _base_draws(key, pmat.shape[0], cls.NEEDS_SECONDARY), pmat
+        )
 
     def packed(self) -> np.ndarray:
         """This instance's parameters as the packed (N_STRAGGLER_PARAMS,) vector."""
@@ -146,13 +215,15 @@ class Exponential(StragglerModel):
     rate: float = 1.0
 
     @staticmethod
-    def _sample_packed(key, n, p):
-        return jax.random.exponential(key, (n,), dtype=jnp.float32) / p[0]
-
-    @staticmethod
-    def _sample_packed_rows(key, pmat):
-        n = pmat.shape[0]
-        return jax.random.exponential(key, (n,), dtype=jnp.float32) / pmat[:, 0]
+    def _from_base(base, p):
+        # Written as multiply-by-reciprocal, NOT ``-l / rate``: XLA rewrites
+        # division by a *constant* into multiplication by its reciprocal, so
+        # a baked-parameter program (the looped engine) and a traced-leaf
+        # program (the sweep) would disagree in the last ulp for rates
+        # without an exact reciprocal.  Computing the reciprocal explicitly
+        # makes both programs multiply by the same f32 value (compile-time
+        # folding of ``-1/rate`` is the same IEEE division).
+        return base.l * (-1.0 / p[..., 0])
 
     def packed(self):
         return np.array([self.rate, 0.0, 0.0], np.float32)
@@ -181,13 +252,9 @@ class ShiftedExponential(StragglerModel):
     rate: float = 1.0
 
     @staticmethod
-    def _sample_packed(key, n, p):
-        return p[0] + jax.random.exponential(key, (n,), dtype=jnp.float32) / p[1]
-
-    @staticmethod
-    def _sample_packed_rows(key, pmat):
-        n = pmat.shape[0]
-        return pmat[:, 0] + jax.random.exponential(key, (n,), dtype=jnp.float32) / pmat[:, 1]
+    def _from_base(base, p):
+        # multiply-by-reciprocal: see Exponential._from_base
+        return p[..., 0] + base.l * (-1.0 / p[..., 1])
 
     def packed(self):
         return np.array([self.shift, self.rate, 0.0], np.float32)
@@ -215,15 +282,13 @@ class Pareto(StragglerModel):
     alpha: float = 2.5
 
     @staticmethod
-    def _sample_packed(key, n, p):
-        u = jax.random.uniform(key, (n,), dtype=jnp.float32, minval=1e-7, maxval=1.0)
-        return p[0] * u ** (-1.0 / p[1])
-
-    @staticmethod
-    def _sample_packed_rows(key, pmat):
-        n = pmat.shape[0]
-        u = jax.random.uniform(key, (n,), dtype=jnp.float32, minval=1e-7, maxval=1.0)
-        return pmat[:, 0] * u ** (-1.0 / pmat[:, 1])
+    def _from_base(base, p):
+        # Inverse CDF via the shared log factor: (1-u)^(-1/alpha) =
+        # exp(l * (-1/alpha)) with l = log1p(-u) computed once per base
+        # draw; the exponent uses multiply-by-reciprocal (see
+        # Exponential._from_base).  u is a float32 uniform in [0, 1), so
+        # 1-u >= 2^-24 and the result is finite at any alpha > 0.
+        return p[..., 0] * jnp.exp(base.l * (-1.0 / p[..., 1]))
 
     def packed(self):
         return np.array([self.x_m, self.alpha, 0.0], np.float32)
@@ -250,22 +315,20 @@ class Bimodal(StragglerModel):
     slow_mean: float = 10.0
     p_slow: float = 0.1
 
-    @staticmethod
-    def _sample_packed(key, n, p):
-        k1, k2, k3 = jax.random.split(key, 3)
-        slow = jax.random.bernoulli(k1, p[2], (n,))
-        tf = jax.random.exponential(k2, (n,), dtype=jnp.float32) * p[0]
-        ts = jax.random.exponential(k3, (n,), dtype=jnp.float32) * p[1]
-        return jnp.where(slow, ts, tf)
+    NEEDS_SECONDARY = True  # independent value draw (u) + mode selector (v)
 
     @staticmethod
-    def _sample_packed_rows(key, pmat):
-        n = pmat.shape[0]
-        k1, k2, k3 = jax.random.split(key, 3)
-        slow = jax.random.bernoulli(k1, pmat[:, 2], (n,))
-        tf = jax.random.exponential(k2, (n,), dtype=jnp.float32) * pmat[:, 0]
-        ts = jax.random.exponential(k3, (n,), dtype=jnp.float32) * pmat[:, 1]
-        return jnp.where(slow, ts, tf)
+    def _from_base(base, p):
+        # v selects the mode (P[v < p_slow] = p_slow), u realizes the value:
+        # a unit exponential scaled by the selected mode's mean — the
+        # marginal is exactly the two-exponential mixture (u and v are
+        # independent).  Using u for the VALUE shares the base log factor
+        # with the other families' transforms, so the mixture costs one
+        # comparison and one select on top of them; the secondary draw is
+        # never fed through a transcendental.
+        slow = base.v < p[..., 2]
+        mean = jnp.where(slow, p[..., 1], p[..., 0])
+        return -base.l * mean
 
     def packed(self):
         return np.array([self.fast_mean, self.slow_mean, self.p_slow], np.float32)
@@ -294,12 +357,16 @@ class Deterministic(StragglerModel):
     value: float = 1.0
 
     @staticmethod
-    def _sample_packed(key, n, p):
-        del key
+    def _from_base(base, p):
+        return jnp.broadcast_to(p[..., 0], base.u.shape).astype(jnp.float32)
+
+    @classmethod
+    def _sample_packed(cls, key, n, p):
+        del key  # consumes no randomness — keep the scalar path draw-free
         return jnp.full((n,), p[0], dtype=jnp.float32)
 
-    @staticmethod
-    def _sample_packed_rows(key, pmat):
+    @classmethod
+    def _sample_packed_rows(cls, key, pmat):
         del key
         return pmat[:, 0].astype(jnp.float32)
 
@@ -550,21 +617,47 @@ def apply_rate_schedule(pmat, mode, leaf, times, scales, t) -> jax.Array:
 def sample_times_per_worker(kinds, pmat, key) -> jax.Array:
     """One response time per worker slot from per-slot families/parameters.
 
-    Every family draws its base randomness over the full (n_slots,) axis
-    from the SAME key — exactly as its scalar ``_sample_packed`` does — and
-    a per-slot ``lax.switch`` (vmapped over slots, so it lowers to a select
-    over the family draws) picks slot i's value from family ``kinds[i]``.
-    A fleet whose rows all equal one model's packed vector is therefore
-    bitwise-identical to that model's ``sample``; padded INACTIVE slots
-    come out +inf.
+    The shared base draws are made ONCE over the full (n_slots,) axis —
+    exactly as every family's scalar ``_sample_packed`` makes them — then
+    each family's cheap ``_from_base`` transform is applied and a per-slot
+    select picks slot i's value from family ``kinds[i]``.  A fleet whose
+    rows all equal one model's packed vector is therefore bitwise-identical
+    to that model's ``sample``; padded INACTIVE slots come out +inf.
+
+    The FULL family set is always traced, deliberately: XLA CPU compiles
+    structurally different sampler subgraphs with last-ulp differences in
+    the response-time chain, so every program whose trajectories must agree
+    bitwise (looped vs sweep, any grid signature) traces this identical
+    sampler structure (see ``sweep.GridSignature``) — under the shared-base
+    protocol the per-family transforms are a few elementwise ops, so there
+    is nothing worth pruning here anyway.
     """
-    stacked = jnp.stack(
-        [cls._sample_packed_rows(key, pmat) for cls in SWEEP_FAMILIES]
-    )  # (n_families, n_slots)
-    branches = [lambda col, _f=f: col[_f] for f in range(len(SWEEP_FAMILIES))]
-    return jax.vmap(
-        lambda kind, col: jax.lax.switch(kind, branches, col)
-    )(kinds, stacked.T)
+    return sample_times_selected(family_select_masks(kinds), pmat, key)
+
+
+def family_select_masks(kinds) -> tuple:
+    """Per-family slot masks for ``sample_times_selected``'s where-chain.
+
+    Constant per cell (pure functions of the kind vector), so hot loops
+    compute them ONCE outside the scan; mask j marks the slots belonging to
+    family j (the chain's default arm — the last family — needs none).
+    """
+    return tuple(kinds == j for j in range(len(SWEEP_FAMILIES) - 1))
+
+
+def sample_times_selected(masks, pmat, key) -> jax.Array:
+    """One response time per slot, selecting among every family's transform
+    of the shared base draws by precomputed ``masks``
+    (``family_select_masks``).  A select passes the chosen operand's bits
+    through unchanged, so this is exactly the per-slot family switch —
+    without materializing an (n_families, n_slots) stack on the hot path.
+    """
+    classes = SWEEP_FAMILIES
+    base = _base_draws(key, pmat.shape[0], any(c.NEEDS_SECONDARY for c in classes))
+    out = classes[-1]._from_base(base, pmat)
+    for j in range(len(classes) - 2, -1, -1):
+        out = jnp.where(masks[j], classes[j]._from_base(base, pmat), out)
+    return out
 
 
 def renewal_remaining(

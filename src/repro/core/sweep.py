@@ -9,12 +9,12 @@ the replica axis:
 
   * straggler parameters are **per-worker** packed matrices
     (``straggler.pack_params_per_worker``: an (n_slots, P) float32 row per
-    worker slot plus an (n_slots,) family-index vector) sampled through a
-    per-slot ``lax.switch`` over ``straggler.SWEEP_FAMILIES`` — the iid
-    paper model is the broadcast-row special case, mixed fleets
-    (``straggler.WorkerFleet``) are first-class, and an optional
-    ``RateSchedule`` drifts a parameter leaf in-graph as a function of the
-    carried sim_time;
+    worker slot plus an (n_slots,) family-index vector) realized as cheap
+    per-family transforms of ONE shared base uniform, selected per slot
+    (``straggler.sample_times_per_worker``) — the iid paper model is the
+    broadcast-row special case, mixed fleets (``straggler.WorkerFleet``)
+    are first-class, and an optional ``RateSchedule`` drifts a parameter
+    leaf in-graph as a function of the carried sim_time;
   * ``n`` is an ordinary grid axis: every cell is padded to a common
     ``n_slots``; slots past the cell's ``n_active`` sample +inf, rank
     strictly after every active worker, and their data shards are held out
@@ -25,10 +25,19 @@ the replica axis:
     controller-state superset;
   * the comm model's (alpha, beta) and the step size eta are leaves too.
 
-Because *kinds* are traced int32 leaves, the compiled program is
-grid-composition-agnostic: changing which controllers/stragglers/
-hyperparameters populate the grid never retraces — only the static shapes
-(n_slots, iteration counts, grid size via jit's shape cache) do.
+Because *kinds* are traced int32 leaves, cell assignment never forces a
+retrace — what is compiled against is the grid's **branch signature**
+(``GridSignature``): the sets of controller kinds and execution modes,
+plus schedule/comm feature flags, actually present.  By default
+(``specialize=True``) the program prunes every switch branch the
+signature excludes — under vmap a switch computes all branches for all
+cells on every iteration, so fixed-composition grids (every figure script)
+otherwise pay a multiplicative all-branches tax — and programs are cached
+per signature, so repopulating a same-signature grid never retraces.
+``specialize=False`` keeps the fully-grid-agnostic program: any same-shape
+grid repopulates with zero retraces, at the all-branches cost.  (The
+straggler family set is deliberately never specialized — see
+``GridSignature``.)
 
 The flattened grid x replica axis is sharded across all local devices via
 ``jax.sharding.NamedSharding`` over a 1-D ``Mesh`` (with a ``shard_map``
@@ -81,14 +90,17 @@ from repro.core.straggler import (
     StragglerModel,
     WorkerFleet,
     apply_rate_schedule,
+    family_select_masks,
     pack_params_per_worker,
     pack_schedule,
-    sample_times_per_worker,
+    sample_times_selected,
 )
 
 __all__ = [
+    "GridSignature",
     "SweepCase",
     "SweepResult",
+    "grid_signature",
     "run_sweep",
     "summarize_cells",
     "product_cases",
@@ -106,6 +118,122 @@ _CTRL_KINDS = {
     VarianceRatioController: _VARIANCE_RATIO,
     SketchedPflugController: _SKETCHED_PFLUG,
 }
+_N_CTRL_KINDS = len(_CTRL_KINDS)
+
+
+class GridSignature(NamedTuple):
+    """The static *shape of the work* a grid can ask of a compiled program.
+
+    Under vmap every ``lax.switch`` computes ALL of its branches for every
+    lane and selects — so a grid-agnostic program pays for every controller
+    kind, feature flag, and execution mode on every iteration whether or
+    not the grid contains them.  The signature records which branches can
+    actually be selected (as *sets* — the per-cell assignment stays a traced
+    leaf), letting ``run_sweep`` compile a program with the absent branches
+    pruned.  Two grids with the same signature (and static shapes) share one
+    compiled program: repopulating a same-signature grid never retraces.
+
+    Fields are sorted tuples of branch indices plus feature flags:
+
+    * ``ctrl_kinds`` — controller branch indices present,
+    * ``modes`` — ``execmode.MODES`` indices present,
+    * ``with_schedule`` — any cell carries a live ``RateSchedule``,
+    * ``with_comm`` — any cell carries a non-zero ``CommModel``.
+
+    The straggler *family* set is deliberately NOT part of the signature:
+    under the shared-base-uniform protocol every family is a couple of
+    cheap elementwise ops, and pruning them would make the sampler
+    subgraph's structure vary between programs — which XLA CPU compiles
+    with last-ulp differences in the response-time chain (measured: a
+    family-restricted looped program vs a full-sampler sweep drifted one
+    ulp of sim_time per ~100 kasync events).  Keeping the sampler
+    structurally identical in every program is what makes the bitwise
+    sweep-vs-looped contract robust.  The pruned axes (controllers, modes,
+    schedule, comm) live outside the response-time-generating subgraph.
+
+    Specialization changes which branches are *traced*, never the
+    arithmetic of the branches that run: every pruned program stays
+    bitwise-equal per cell to looped ``run_monte_carlo``.
+    """
+
+    ctrl_kinds: tuple
+    modes: tuple
+    with_schedule: bool
+    with_comm: bool
+
+
+def grid_signature(cases: Sequence["SweepCase"], n_slots: int) -> GridSignature:
+    """Derive the branch signature of a populated grid (see GridSignature)."""
+    del n_slots  # families (which padding would affect) are not in the signature
+    kinds, modes = set(), set()
+    with_schedule = with_comm = False
+    for c in cases:
+        kind = _CTRL_KINDS.get(type(c.controller))
+        if kind is not None:  # unknown controllers error later, in _cell_of
+            kinds.add(kind)
+        if c.mode in execmode.MODES:
+            modes.add(execmode.MODES[c.mode])
+        if isinstance(c.straggler, WorkerFleet):
+            sched = c.straggler.schedule
+            if sched is not None and len(sched.times):
+                with_schedule = True
+        if c.comm is not None and (c.comm.alpha != 0.0 or c.comm.beta != 0.0):
+            with_comm = True
+    return GridSignature(
+        ctrl_kinds=tuple(sorted(kinds)),
+        modes=tuple(sorted(modes)),
+        with_schedule=with_schedule,
+        with_comm=with_comm,
+    )
+
+
+def _full_signature(cases: Sequence["SweepCase"]) -> GridSignature:
+    """``specialize=False``: the fully-grid-agnostic program family.
+
+    Every controller kind and feature flag is kept, so ANY same-shape grid
+    repopulates without retracing.  The one static split retained is the
+    historical all-sync flag: a grid with no async cell compiles the lean
+    pre-mode program (no ExecCarry), any async cell selects the full
+    three-mode program.
+    """
+    all_sync = all(c.mode == "sync" for c in cases)
+    return GridSignature(
+        ctrl_kinds=tuple(range(_N_CTRL_KINDS)),
+        modes=(execmode.MODE_SYNC,) if all_sync
+        else tuple(sorted(execmode.MODES.values())),
+        with_schedule=True,
+        with_comm=True,
+    )
+
+
+def _static_remap(present: tuple, total: int):
+    """int32 lookup table mapping global branch indices to pruned-local ones."""
+    remap = np.zeros((total,), np.int32)
+    for j, g in enumerate(present):
+        remap[g] = j
+    return remap
+
+
+def _auto_unroll(sig: GridSignature) -> int:
+    """Scan-unroll heuristic for ``unroll=None``, from measurements on the
+    2-core reference host (benchmarks/README.md):
+
+    * async in the signature -> 4: the ExecCarry body (and kbatch's inner
+      n_slots-event scan when present) is large, and compile time scales
+      with the unrolled body while deeper unroll bought no warm time;
+    * sync-only, multiple controller kinds -> 6 (the 15-cell baseline
+      grid's shape: ~5% warmer-than-4 throughput at moderate compile);
+    * sync-only, single controller kind -> 8: the maximally pruned body is
+      small enough that deeper unrolling keeps amortizing scan-trip
+      overhead.
+
+    Unroll never affects the arithmetic — trajectories are
+    bitwise-identical across unroll values (pinned by
+    tests/test_specialize.py).
+    """
+    if sig.modes != (execmode.MODE_SYNC,):
+        return 4
+    return 8 if len(sig.ctrl_kinds) == 1 else 6
 
 
 @dataclasses.dataclass(frozen=True)
@@ -348,74 +476,64 @@ def _ctrl_init(cp: _CellParams, params_like, sketch_dim: int) -> _CtrlState:
     )
 
 
-def _branch_fixed(cp, state, grads, sim_time, stats):
-    del cp, grads, sim_time, stats
-    return state, state.k
+def _sel(pred, a, b):
+    """``where`` that folds away when the predicate is statically known."""
+    if pred is True:
+        return a
+    if pred is False:
+        return b
+    return jnp.where(pred, a, b)
 
 
-def _branch_pflug(cp, state, grads, sim_time, stats):
-    del sim_time, stats
-    dot = _tree_dot(grads, state.prev_grad)
-    delta = jnp.where(state.have_prev, jnp.where(dot < 0, 1, -1), 0).astype(jnp.int32)
-    count_neg = state.count_negative + delta
-    do_switch = (
-        (count_neg > cp.thresh)
-        & (state.count_iter > cp.burnin)
-        & (state.k + cp.step <= cp.k_max)
-    )
-    new_k = jnp.where(do_switch, state.k + cp.step, state.k)
-    count_neg = jnp.where(do_switch, 0, count_neg)
-    count_iter = jnp.where(do_switch, 0, state.count_iter) + 1
-    new_state = state._replace(
-        k=new_k,
-        count_negative=count_neg,
-        count_iter=count_iter,
-        prev_grad=jax.tree.map(lambda g: g.astype(jnp.float32), grads),
-        have_prev=jnp.asarray(True),
-        n_switches=state.n_switches + do_switch.astype(jnp.int32),
-    )
-    return new_state, new_k
+def _sel_tree(pred, a, b):
+    if pred is True:
+        return a
+    if pred is False:
+        return b
+    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
 
 
-def _branch_schedule(cp, state, grads, sim_time, stats):
-    del grads, stats
-    n_passed = jnp.sum(sim_time >= cp.switch_times).astype(jnp.int32)
-    # Cap at the cell's ACTIVE worker count — with n as a grid axis the
-    # class-side cap (ScheduleController.n_workers) is a per-cell value.
-    k = jnp.minimum(cp.k0 + cp.step * n_passed, cp.n_active)
-    return state._replace(k=k), k
+def _pred_or(a, b):
+    if a is True or b is True:
+        return True
+    if a is False:
+        return b
+    if b is False:
+        return a
+    return a | b
 
 
-def _branch_variance_ratio(cp, state, grads, sim_time, stats):
-    del sim_time, stats
-    d, omd = cp.decay, cp.one_minus_decay
-    ema_mean = jax.tree.map(
-        lambda m, g: d * m + omd * g.astype(jnp.float32), state.ema_mean, grads
+class _CtrlPreds(NamedTuple):
+    """Per-cell controller-kind predicates, hoisted out of the hot loop.
+
+    Each field is a traced per-lane bool, or a static python bool when the
+    grid's signature decides it (absent kind -> False; only kind -> True),
+    letting the unified update fold the corresponding selects away."""
+
+    is_pflug: Any
+    is_schedule: Any
+    is_vr: Any
+    is_sketched: Any
+
+
+def _ctrl_preds(cp: _CellParams, ctrl_kinds: tuple | None) -> _CtrlPreds:
+    kinds = tuple(ctrl_kinds) if ctrl_kinds is not None else tuple(
+        range(_N_CTRL_KINDS)
     )
-    gsq = _tree_dot(grads, grads)
-    ema_sq = d * state.ema_sq + omd * gsq
-    mean_sq = _tree_dot(ema_mean, ema_mean)
-    ratio = mean_sq / jnp.maximum(ema_sq, 1e-30)
-    do_switch = (
-        (ratio < cp.ratio_thresh)
-        & (state.count_iter > cp.burnin)
-        & (state.k + cp.step <= cp.k_max)
+
+    def pred(kind):
+        if kind not in kinds:
+            return False
+        if kinds == (kind,):
+            return True
+        return cp.ctrl_kind == kind
+
+    return _CtrlPreds(
+        is_pflug=pred(_PFLUG),
+        is_schedule=pred(_SCHEDULE),
+        is_vr=pred(_VARIANCE_RATIO),
+        is_sketched=pred(_SKETCHED_PFLUG),
     )
-    new_k = jnp.where(do_switch, state.k + cp.step, state.k)
-    ema_mean = jax.tree.map(
-        lambda m: jnp.where(do_switch, jnp.zeros_like(m), m), ema_mean
-    )
-    ema_sq = jnp.where(do_switch, 0.0, ema_sq)
-    count_iter = jnp.where(do_switch, 0, state.count_iter) + 1
-    new_state = state._replace(
-        k=new_k,
-        ema_mean=ema_mean,
-        ema_sq=ema_sq,
-        count_iter=count_iter,
-        have_prev=jnp.asarray(True),
-        n_switches=state.n_switches + do_switch.astype(jnp.int32),
-    )
-    return new_state, new_k
 
 
 def _apply_sketch(signs, grads, sketch_dim: int) -> jax.Array:
@@ -434,45 +552,147 @@ def _apply_sketch(signs, grads, sketch_dim: int) -> jax.Array:
     return z
 
 
-def _make_branch_sketched_pflug(sketch_dim: int):
-    def _branch_sketched_pflug(cp, state, grads, sim_time, stats):
-        del sim_time, stats
-        z = _apply_sketch(cp.sketch_signs, grads, sketch_dim)
-        dot = jnp.dot(z, state.prev_sketch)
-        delta = jnp.where(state.have_prev, jnp.where(dot < 0, 1, -1), 0).astype(jnp.int32)
-        count_neg = state.count_negative + delta
-        do_switch = (
-            (count_neg > cp.thresh)
-            & (state.count_iter > cp.burnin)
-            & (state.k + cp.step <= cp.k_max)
-        )
-        new_k = jnp.where(do_switch, state.k + cp.step, state.k)
-        count_neg = jnp.where(do_switch, 0, count_neg)
-        count_iter = jnp.where(do_switch, 0, state.count_iter) + 1
-        new_state = state._replace(
-            k=new_k,
-            count_negative=count_neg,
-            count_iter=count_iter,
-            prev_sketch=z,
-            have_prev=jnp.asarray(True),
-            n_switches=state.n_switches + do_switch.astype(jnp.int32),
-        )
-        return new_state, new_k
+def _ctrl_update(
+    cp: _CellParams, state, grads, sim_time, stats, sketch_dim: int,
+    ctrl_kinds: tuple | None = None,
+    preds: _CtrlPreds | None = None,
+):
+    """The unified controller update, branch-signature-specialized.
 
-    return _branch_sketched_pflug
+    Under vmap a ``lax.switch`` over per-kind branch functions computes
+    every branch for every lane and then select_n's FULL state tuples —
+    duplicating the shared k/count bookkeeping per branch and forcing each
+    branch to materialize candidate values for leaves it never touches.
+    This form instead computes each present kind's *signal* once (the
+    Pflug sign test on the dense or sketched gradient dot, the
+    variance-ratio EMAs, the schedule's time trigger), emits the shared
+    switch/step bookkeeping once, and merges per-kind leaves with single
+    two-way selects.  Per selected lane the arithmetic is op-for-op the
+    class controller's update (the bitwise sweep-vs-looped contract);
+    kinds outside ``ctrl_kinds`` are never traced, and with a single kind
+    present every select folds away.
 
-
-def _ctrl_update(cp: _CellParams, state, grads, sim_time, stats, sketch_dim: int):
-    # ``stats`` (execmode.ExecStats) rides through the switch untouched by
-    # the current policies — the hook staleness-aware controllers plug into.
-    branches = (
-        _branch_fixed,
-        _branch_pflug,
-        _branch_schedule,
-        _branch_variance_ratio,
-        _make_branch_sketched_pflug(sketch_dim),
+    ``stats`` (execmode.ExecStats) rides through untouched by the current
+    policies — the hook staleness-aware controllers plug into.
+    """
+    del stats
+    kinds = tuple(ctrl_kinds) if ctrl_kinds is not None else tuple(
+        range(_N_CTRL_KINDS)
     )
-    return jax.lax.switch(cp.ctrl_kind, branches, cp, state, grads, sim_time, stats)
+    if preds is None:
+        preds = _ctrl_preds(cp, kinds)
+    has_pflug = _PFLUG in kinds
+    has_sketched = _SKETCHED_PFLUG in kinds
+    has_schedule = _SCHEDULE in kinds
+    has_vr = _VARIANCE_RATIO in kinds
+    counting = _pred_or(preds.is_pflug, preds.is_sketched)
+    adapting = _pred_or(counting, preds.is_vr)
+    i32 = jnp.int32
+    k = state.k
+
+    # --- counting signal: sign of consecutive aggregated-gradient dots
+    # (Algorithm 1), on the dense gradient (pflug) or its count-sketch.
+    dot = z = None
+    if has_pflug:
+        dot = _tree_dot(grads, state.prev_grad)
+    if has_sketched:
+        z = _apply_sketch(cp.sketch_signs, grads, sketch_dim)
+        dot_s = jnp.dot(z, state.prev_sketch)
+        dot = dot_s if dot is None else _sel(preds.is_sketched, dot_s, dot)
+    if counting is not False:
+        delta = jnp.where(
+            state.have_prev, jnp.where(dot < 0, 1, -1), 0
+        ).astype(i32)
+        count_neg1 = state.count_negative + delta
+
+    # --- variance-ratio signal: ||EMA(g)||^2 / EMA(||g||^2)
+    if has_vr:
+        d, omd = cp.decay, cp.one_minus_decay
+        ema1 = jax.tree.map(
+            lambda m, g: d * m + omd * g.astype(jnp.float32),
+            state.ema_mean, grads,
+        )
+        gsq = _tree_dot(grads, grads)
+        ema_sq1 = d * state.ema_sq + omd * gsq
+        mean_sq = _tree_dot(ema1, ema1)
+        ratio = mean_sq / jnp.maximum(ema_sq1, 1e-30)
+
+    # --- shared adaptive bookkeeping: one switch test, one k bump
+    new_k = k
+    do_switch = False
+    if adapting is not False:
+        if has_vr and counting is not False:
+            cond = jnp.where(
+                preds.is_vr, ratio < cp.ratio_thresh, count_neg1 > cp.thresh
+            )
+        elif has_vr:
+            cond = ratio < cp.ratio_thresh
+        else:
+            cond = count_neg1 > cp.thresh
+        gate = (state.count_iter > cp.burnin) & (k + cp.step <= cp.k_max)
+        do_switch = (
+            cond & gate if adapting is True else adapting & cond & gate
+        )
+        new_k = jnp.where(do_switch, k + cp.step, k)
+        count_iter1 = jnp.where(do_switch, 0, state.count_iter) + 1
+
+    # --- schedule's time-triggered k (capped at the cell's ACTIVE workers —
+    # with n as a grid axis the class-side cap is a per-cell value)
+    if has_schedule:
+        n_passed = jnp.sum(sim_time >= cp.switch_times).astype(i32)
+        k_sched = jnp.minimum(cp.k0 + cp.step * n_passed, cp.n_active)
+        new_k = _sel(preds.is_schedule, k_sched, new_k)
+
+    new_state = state._replace(
+        k=new_k,
+        count_negative=(
+            state.count_negative if counting is False
+            else _sel(counting, jnp.where(do_switch, 0, count_neg1),
+                      state.count_negative)
+        ),
+        count_iter=(
+            state.count_iter if adapting is False
+            else _sel(adapting, count_iter1, state.count_iter)
+        ),
+        prev_grad=(
+            state.prev_grad if not has_pflug
+            else _sel_tree(
+                preds.is_pflug,
+                jax.tree.map(lambda g: g.astype(jnp.float32), grads),
+                state.prev_grad,
+            )
+        ),
+        prev_sketch=(
+            state.prev_sketch if not has_sketched
+            else _sel(preds.is_sketched, z, state.prev_sketch)
+        ),
+        ema_mean=(
+            state.ema_mean if not has_vr
+            else _sel_tree(
+                preds.is_vr,
+                jax.tree.map(
+                    lambda m: jnp.where(do_switch, jnp.zeros_like(m), m), ema1
+                ),
+                state.ema_mean,
+            )
+        ),
+        ema_sq=(
+            state.ema_sq if not has_vr
+            else _sel(preds.is_vr, jnp.where(do_switch, 0.0, ema_sq1),
+                      state.ema_sq)
+        ),
+        have_prev=(
+            state.have_prev if adapting is False
+            else _sel(adapting, jnp.asarray(True), state.have_prev)
+        ),
+        n_switches=(
+            state.n_switches if adapting is False
+            # do_switch already carries the adapting mask; int add is exact,
+            # so non-adaptive lanes' +0 reproduces their branches' pass-through.
+            else state.n_switches + do_switch.astype(i32)
+        ),
+    )
+    return new_state, new_k
 
 
 # ---------------------------------------------------------------- the engine
@@ -499,38 +719,69 @@ def _make_run_one_moded(
     rem: int,
     eval_every: int,
     unroll: int,
+    sig: GridSignature,
 ):
     """Execution-mode-aware run_one: the ``execmode.ExecCarry`` superset
     threaded through the same eval-block scaffolding, with a per-cell
-    ``lax.switch`` over the three mode step functions.  Under vmap the
-    switch computes every branch and selects, so ``mode`` is an ordinary
-    traced grid leaf — sync and async arms share ONE compiled program and
-    repopulating an equally-shaped mixed grid never retraces.  The sync
-    branch performs the pre-mode arithmetic op for op (select passes the
-    chosen operand through unchanged), so sync cells in a mixed grid stay
-    bitwise-equal to the lean engine; the async branches are the SAME step
-    functions the looped ``run_monte_carlo(mode=...)`` traces."""
+    ``lax.switch`` over the execution-mode *tails* the signature admits.
+    Under vmap the switch computes every branch and selects, so ``mode`` is
+    an ordinary traced grid leaf — the signature's modes share ONE compiled
+    program and repopulating a same-signature grid never retraces.
+
+    The mode-invariant prelude (key split, per-slot sampling, renewal
+    residuals, fastest-K ranking/order statistic, comm) is hoisted OUT of
+    the switch (``execmode.make_mode_prelude_and_tails``), so only mode
+    bookkeeping — which gradient stack to differentiate, how snapshots /
+    staleness / clocks evolve — is selected per cell; in particular
+    kbatch's n_slots-event inner scan is traced only when kbatch is in the
+    signature.  The sync tail performs the pre-mode arithmetic op for op
+    (for sync cells ``pending`` is never set, so the hoisted residuals ARE
+    the fresh draw bit for bit), and the async tails are the SAME step code
+    the looped ``run_monte_carlo(mode=...)`` traces — sweep cells stay
+    bitwise-equal to the looped engine in every mode."""
     Xw = X.reshape((n_workers, s) + X.shape[1:])
     yw = y.reshape((n_workers, s) + y.shape[1:])
     stale_grad, shard_grad_at = execmode.make_stale_grad_fns(
         per_example_loss_fn, Xw, yw, n_workers
     )
+    modes = sig.modes
+    mode_remap = (
+        None if len(modes) in (1, len(execmode.MODES))
+        else jnp.asarray(_static_remap(modes, len(execmode.MODES)))
+    )
 
     def run_one(cp: _CellParams, replica_key):
-        def draw(sub, sim_time):
-            pm = apply_rate_schedule(
-                cp.strag_p, cp.sched_mode, cp.sched_leaf,
-                cp.sched_times, cp.sched_scales, sim_time,
-            )
-            return sample_times_per_worker(cp.strag_kinds, pm, sub)
+        # Per-cell constants, hoisted out of the iteration scan: the family
+        # select masks, controller predicates, and mode index are all pure
+        # functions of the cell's kind leaves.
+        fam_masks = family_select_masks(cp.strag_kinds)
+        ctrl_preds = _ctrl_preds(cp, sig.ctrl_kinds)
+        mode_local = cp.mode if mode_remap is None else mode_remap[cp.mode]
 
-        def comm_time(k):
-            return cp.comm_alpha + cp.comm_beta * k.astype(jnp.float32)
+        def draw(sub, sim_time):
+            pm = (
+                apply_rate_schedule(
+                    cp.strag_p, cp.sched_mode, cp.sched_leaf,
+                    cp.sched_times, cp.sched_scales, sim_time,
+                )
+                if sig.with_schedule
+                else cp.strag_p
+            )
+            return sample_times_selected(fam_masks, pm, sub)
+
+        comm_time = (
+            (lambda k: cp.comm_alpha + cp.comm_beta * k.astype(jnp.float32))
+            if sig.with_comm
+            else None
+        )
 
         def ctrl_update(state, g, sim_time, stats):
-            return _ctrl_update(cp, state, g, sim_time, stats, sketch_dim)
+            return _ctrl_update(
+                cp, state, g, sim_time, stats, sketch_dim, sig.ctrl_kinds,
+                preds=ctrl_preds,
+            )
 
-        steps = execmode.make_mode_steps(
+        prelude, tails = execmode.make_mode_prelude_and_tails(
             n_slots=n_workers,
             draw=draw,
             sync_grad=grad_fn,
@@ -541,8 +792,16 @@ def _make_run_one_moded(
             ctrl_update=ctrl_update,
         )
 
-        def one_step(carry: execmode.ExecCarry, _):
-            return jax.lax.switch(cp.mode, steps, carry)
+        if len(modes) == 1:
+
+            def one_step(carry: execmode.ExecCarry, _):
+                return tails[modes[0]](carry, prelude(carry))
+
+        else:
+            sel_tails = tuple(tails[m] for m in modes)
+
+            def one_step(carry: execmode.ExecCarry, _):
+                return jax.lax.switch(mode_local, sel_tails, carry, prelude(carry))
 
         def eval_block(carry: execmode.ExecCarry, length: int):
             carry, ks = jax.lax.scan(
@@ -574,9 +833,10 @@ def _make_run_one_moded(
 
 
 # (loss_fn, n_workers, num_iters, eval_every, unroll, n_switch_slots,
-#  n_sched_slots, sketch_dim, partition, ndev, with_async) -> jitted flat
+#  n_sched_slots, sketch_dim, partition, ndev, GridSignature) -> jitted flat
 # program.  Jit's own cache handles shapes (grid size, params/X/y shapes)
-# under each entry.
+# under each entry; the signature key is what makes same-signature grid
+# repopulation a cache hit and a new signature exactly one new trace.
 _PROGRAM_CACHE: dict = {}
 _N_TRACES = 0
 
@@ -600,9 +860,13 @@ def _build_flat_program(
     sketch_dim: int,
     partition: str,
     mesh: Mesh | None,
-    with_async: bool = False,
+    sig: GridSignature,
 ):
     n_full, rem = divmod(num_iters, eval_every)
+    # A sync-only signature compiles the lean program (no async carry, no
+    # mode switch — byte-identical to the historical all-sync engine); any
+    # async mode in the signature selects the unified ExecCarry program.
+    with_async = sig.modes != (execmode.MODE_SYNC,)
 
     def make_run_one(params0, X, y):
         """run_one closing over (possibly device-local) data — built inside
@@ -623,25 +887,41 @@ def _build_flat_program(
             return _make_run_one_moded(
                 per_example_loss_fn, n_workers, s, params0, X, y,
                 grad_fn, mean_loss, sketch_dim, n_full, rem, eval_every, unroll,
+                sig,
             )
 
         def run_one(cp: _CellParams, replica_key):
+            # Per-cell constants, hoisted out of the iteration scan (pure
+            # functions of the cell's kind leaves).
+            fam_masks = family_select_masks(cp.strag_kinds)
+            ctrl_preds = _ctrl_preds(cp, sig.ctrl_kinds)
+
             def one_step(carry: _SweepCarry, _):
                 new_key, sub = jax.random.split(carry.key)
                 k = carry.ctrl_state.k
-                pm = apply_rate_schedule(
-                    cp.strag_p, cp.sched_mode, cp.sched_leaf,
-                    cp.sched_times, cp.sched_scales, carry.sim_time,
+                # Signature pruning: the rate-schedule drift and the
+                # comm-model adds are traced only when some cell can select
+                # them (each is a bitwise no-op for the cells that don't).
+                pm = (
+                    apply_rate_schedule(
+                        cp.strag_p, cp.sched_mode, cp.sched_leaf,
+                        cp.sched_times, cp.sched_scales, carry.sim_time,
+                    )
+                    if sig.with_schedule
+                    else cp.strag_p
                 )
-                times = sample_times_per_worker(cp.strag_kinds, pm, sub)
+                times = sample_times_selected(fam_masks, pm, sub)
                 mask, t_iter = aggregation.fastest_k_mask_time(times, k)
-                t_iter = t_iter + (cp.comm_alpha + cp.comm_beta * k.astype(jnp.float32))
+                if sig.with_comm:
+                    t_iter = t_iter + (
+                        cp.comm_alpha + cp.comm_beta * k.astype(jnp.float32)
+                    )
                 g = grad_fn(carry.params, mask, k)
                 params = jax.tree.map(lambda p, gi: p - cp.eta * gi, carry.params, g)
                 sim_time = carry.sim_time + t_iter
                 ctrl_state, _ = _ctrl_update(
                     cp, carry.ctrl_state, g, sim_time, execmode.zero_stats(k),
-                    sketch_dim,
+                    sketch_dim, sig.ctrl_kinds, preds=ctrl_preds,
                 )
                 return _SweepCarry(params, ctrl_state, sim_time, new_key), k
 
@@ -701,7 +981,13 @@ def _build_flat_program(
             return sharded(params0, X, y, cells, keys)
         return jax.vmap(make_run_one(params0, X, y))(cells, keys)
 
-    return jax.jit(run_flat)
+    # The flat cell-leaf and key buffers are freshly materialized inside
+    # every run_sweep dispatch (never caller-owned), so donating them lets
+    # XLA reuse their allocations for the scan carries/outputs instead of
+    # holding both live across the call.  CPU XLA has no donation support
+    # (it would warn and ignore), so only accelerator backends request it.
+    donate = (3, 4) if jax.default_backend() in ("gpu", "tpu") else ()
+    return jax.jit(run_flat, donate_argnums=donate)
 
 
 def run_sweep(
@@ -716,10 +1002,11 @@ def run_sweep(
     key: jax.Array | None = None,
     n_replicas: int | None = None,
     eval_every: int = 10,
-    unroll: int = 4,
+    unroll: int | None = None,
     n_switch_slots: int | None = None,
     n_sched_slots: int | None = None,
     partition: str = "auto",
+    specialize: bool = True,
 ) -> SweepResult:
     """Run a G-cell x R-replica grid of fastest-k SGD as ONE jitted dispatch.
 
@@ -730,11 +1017,28 @@ def run_sweep(
     ordinary grid axis.  Cells whose controllers all use the full slot
     count reproduce the pre-heterogeneity engine bit for bit.
 
-    The default ``unroll`` is lower than ``run_monte_carlo``'s 8: the grid
-    axis already saturates the vector units, so deeper unrolling buys no
-    throughput here while the unified program's compile time scales with the
-    unrolled body (measured 34s at unroll=8 vs 7s at unroll=4 on a 15-cell
-    grid, identical warm runtime).  Unroll never affects the arithmetic —
+    ``specialize`` (default True) enables **branch-signature
+    specialization**: the grid's ``GridSignature`` — the *sets* of
+    controller kinds and execution modes plus feature flags (rate
+    schedules, comm models) actually present — is derived at dispatch, and
+    the compiled program prunes every switch branch the signature excludes
+    (under vmap a switch computes ALL branches for ALL cells every
+    iteration, so fixed-composition grids otherwise pay a multiplicative
+    all-branches tax).  Programs are cached per signature: repopulating a
+    same-signature grid never retraces, and a new signature compiles
+    exactly once.  ``specialize=False`` keeps the fully grid-agnostic
+    program (all kinds/modes/features traced; any same-shape grid
+    repopulates with zero retraces) — use it when the grid composition
+    itself varies call to call.  Straggler families are never specialized
+    (see ``GridSignature``).  Specialization changes which branches are
+    traced, never the arithmetic of the branches that run: cells are
+    bitwise-equal to looped ``run_monte_carlo`` either way.
+
+    ``unroll=None`` (the default) picks the scan unroll from the signature:
+    4 — the measured sweet spot for all-branch bodies (identical warm
+    runtime to 8, ~5x cheaper compile on a 15-cell grid) — rising to 8 for
+    pruned sync-only single-controller programs, whose small step bodies
+    can afford deeper unrolling.  Unroll never affects the arithmetic —
     trajectories are bitwise-identical across unroll values.
 
     ``partition`` chooses how the flattened (G*R,) axis is laid out across
@@ -809,13 +1113,15 @@ def run_sweep(
             "one sweep supports a single static sketch layout"
         )
     sketch_dim = sketch_dims.pop() if sketch_dims else 1
-    # Static program-family flag: an all-sync grid compiles the lean
-    # pre-mode program (no async carry, no branch switch — byte-identical to
-    # the historical engine and its perf baseline); any async cell selects
-    # the unified ExecCarry program, in which `mode` is an ordinary traced
-    # leaf (mixed grids of the same shape and mode-capability never
-    # retrace).
-    with_async = any(c.mode != "sync" for c in cases)
+    # The grid's branch signature selects the program family: specialized
+    # programs trace only the branches the signature admits (cached per
+    # signature — same-signature repopulation never retraces), while
+    # specialize=False collapses every grid onto the fully-grid-agnostic
+    # signature (retaining the historical lean-program split for all-sync
+    # grids).  Either way `mode`/kind assignments stay traced leaves.
+    sig = grid_signature(cases, n_workers) if specialize else _full_signature(cases)
+    if unroll is None:
+        unroll = _auto_unroll(sig)
     G, R = len(cases), keys.shape[0]
     cells_np = [
         _cell_of(c, n_workers, n_switch_slots, n_sched_slots, sketch_dim, params0)
@@ -856,13 +1162,13 @@ def run_sweep(
         int(sketch_dim),
         partition,
         ndev,
-        with_async,
+        sig,
     )
     program = _PROGRAM_CACHE.get(cache_key)
     if program is None:
         program = _build_flat_program(
             per_example_loss_fn, n_workers, num_iters, eval_every, unroll,
-            sketch_dim, partition, mesh, with_async,
+            sketch_dim, partition, mesh, sig,
         )
         _PROGRAM_CACHE[cache_key] = program
     times, losses, ks = program(params0, X, y, flat_cells, flat_keys)

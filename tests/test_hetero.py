@@ -248,12 +248,18 @@ def test_forced_hetero_sweep_cell_bitwise_vs_looped_monte_carlo(linreg):
 
 
 def test_hetero_grid_repopulation_does_not_retrace(linreg):
-    """Acceptance: repopulating an equally-shaped (grid, n_slots) sweep —
-    different fleets, schedules, active counts, controllers — must reuse the
-    compiled program (kinds and per-worker parameters are traced leaves)."""
+    """Acceptance: under ``specialize=False`` repopulating an equally-shaped
+    (grid, n_slots) sweep — different fleets, schedules, active counts,
+    controllers — must reuse the compiled program (kinds and per-worker
+    parameters are traced leaves).  ``specialize=False`` pins the
+    fully-grid-agnostic program family here; the default per-signature
+    cache happens to no-retrace these two grids as well (same controller
+    kinds and flags — family composition never enters the signature), and
+    tests/test_specialize.py pins that contract directly."""
     data, eta = linreg
     keys = jax.random.split(jax.random.PRNGKey(1), 3)
-    kw = dict(n_workers=N, num_iters=80, keys=keys, eval_every=40)
+    kw = dict(n_workers=N, num_iters=80, keys=keys, eval_every=40,
+              specialize=False)
     grid_a = [
         SweepCase(FixedKController(n_workers=N, k=2),
                   WorkerFleet(models=(Exponential(1.0),) * 6 + (Pareto(0.5, 1.5),) * 4,

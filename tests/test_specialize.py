@@ -1,0 +1,260 @@
+"""Branch-signature specialization tests (repro.core.sweep).
+
+The sweep engine compiles per **grid signature** — the sets of controller
+kinds and execution modes plus schedule/comm feature flags present —
+pruning every switch branch the signature excludes.  (The straggler family
+set deliberately does NOT shape the signature: the sampler subgraph must
+be structurally identical in every program — see GridSignature.)  Pinned
+here:
+
+* same-signature grid repopulation hits the compiled-program cache;
+* a new signature compiles exactly once (and re-dispatching it is a hit);
+* specialized and unspecialized programs are bitwise-equal per cell to the
+  looped ``run_monte_carlo`` ground truth — including a mixed sync+kasync
+  grid and a sketched-Pflug cell;
+* ``unroll`` (including the signature-derived ``unroll=None`` default)
+  never affects the arithmetic;
+* ``grid_signature`` itself: padding admits the INACTIVE family, zero comm
+  models stay pruned, schedules are detected.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import execmode
+from repro.core.aggregation import CommModel
+from repro.core.controller import (
+    FixedKController,
+    PflugController,
+    SketchedPflugController,
+    VarianceRatioController,
+)
+from repro.core.montecarlo import run_monte_carlo
+from repro.core.straggler import (
+    Bimodal,
+    Exponential,
+    Pareto,
+    RateSchedule,
+    WorkerFleet,
+)
+from repro.core.sweep import (
+    SweepCase,
+    _auto_unroll,
+    grid_signature,
+    run_sweep,
+    sweep_cache_stats,
+)
+from repro.data import make_linreg_data
+
+N, M, D = 10, 200, 5
+
+
+@pytest.fixture(scope="module")
+def linreg():
+    data = make_linreg_data(jax.random.PRNGKey(0), m=M, d=D)
+    L = 2 * float(jnp.linalg.eigvalsh(data.X.T @ data.X / M).max())
+    return data, 0.5 / L
+
+
+def _loss(w, X, y):
+    return (X @ w - y) ** 2
+
+
+def _assert_cells_match_looped(res, cases, data, keys, num_iters, eval_every):
+    for g, c in enumerate(cases):
+        ref = run_monte_carlo(
+            _loss, jnp.zeros((D,)), data.X, data.y, n_workers=N,
+            controller=c.controller, straggler=c.straggler, eta=c.eta,
+            comm=c.comm, num_iters=num_iters, keys=keys, eval_every=eval_every,
+            mode=c.mode,
+        )
+        for name in ("time", "loss", "k"):
+            a = np.asarray(getattr(res, name)[g])
+            b = np.asarray(getattr(ref, name))
+            assert np.array_equal(a, b), (
+                f"cell {g} ({c.name()}) {name} differs from looped engine"
+            )
+
+
+# ------------------------------------------------------- the signature itself
+
+
+def test_grid_signature_fields(linreg):
+    _, eta = linreg
+    fleet = WorkerFleet(
+        models=(Exponential(1.0),) * 4 + (Pareto(0.5, 1.5),) * 2,
+        schedule=RateSchedule(times=(5.0,), scales=(0.5,)),
+    )
+    cases = [
+        SweepCase(PflugController(n_workers=N, k0=2, step=2, thresh=5),
+                  Exponential(1.0), eta, label="a"),
+        SweepCase(FixedKController(n_workers=6, k=2), fleet, eta, label="b",
+                  mode="kasync"),
+    ]
+    sig = grid_signature(cases, N)
+    assert sig.ctrl_kinds == (0, 1)  # fixed, pflug
+    assert sig.modes == (execmode.MODE_SYNC, execmode.MODE_KASYNC)
+    assert sig.with_schedule and not sig.with_comm
+    # the straggler family set deliberately does NOT shape the signature:
+    # the sampler subgraph must be structurally identical in every program
+    # (see GridSignature's docstring), so a family change alone never
+    # retraces a same-shape grid.
+    assert not hasattr(sig, "families")
+
+
+def test_grid_signature_zero_comm_stays_pruned(linreg):
+    _, eta = linreg
+    zero = SweepCase(FixedKController(n_workers=N, k=2), Exponential(), eta,
+                     comm=CommModel(alpha=0.0, beta=0.0))
+    live = SweepCase(FixedKController(n_workers=N, k=2), Exponential(), eta,
+                     comm=CommModel(alpha=0.1, beta=0.0), label="live")
+    assert not grid_signature([zero], N).with_comm
+    assert grid_signature([zero, live], N).with_comm
+
+
+# --------------------------------------------------- the per-signature cache
+
+
+def test_same_signature_repopulation_hits_cache(linreg):
+    """(a) repopulating a same-signature grid — different hyperparameters,
+    rates, etas — must reuse the compiled program; (b) a new signature
+    compiles exactly once."""
+    data, eta = linreg
+    keys = jax.random.split(jax.random.PRNGKey(2), 3)
+    kw = dict(n_workers=N, num_iters=80, keys=keys, eval_every=40)
+    grid_a = [
+        SweepCase(PflugController(n_workers=N, k0=2, step=2, thresh=5),
+                  Exponential(rate=1.0), eta, label="p"),
+        SweepCase(FixedKController(n_workers=N, k=3), Pareto(0.5, 1.5), eta,
+                  label="f"),
+    ]
+    run_sweep(_loss, jnp.zeros((D,)), data.X, data.y, cases=grid_a, **kw)
+    before = sweep_cache_stats()["traces"]
+    grid_b = [  # same kinds/flags -> same signature (families never matter:
+        # the bimodal swap-in below exercises exactly that)
+        SweepCase(PflugController(n_workers=N, k0=1, step=3, thresh=9,
+                                  burnin=7), Bimodal(0.5, 8.0, 0.1),
+                  eta * 0.5, label="p2"),
+        SweepCase(FixedKController(n_workers=N, k=7), Exponential(rate=2.7),
+                  eta, label="f2"),
+    ]
+    res = run_sweep(_loss, jnp.zeros((D,)), data.X, data.y, cases=grid_b, **kw)
+    assert sweep_cache_stats()["traces"] == before, (
+        "same-signature repopulation retraced"
+    )
+    assert grid_signature(grid_a, N) == grid_signature(grid_b, N)
+    _assert_cells_match_looped(res, grid_b, data, keys, 80, 40)
+
+    grid_c = [  # a new controller KIND joins -> ONE new signature, ONE trace
+        SweepCase(VarianceRatioController(n_workers=N, k0=1, step=2,
+                                          burnin=10),
+                  Bimodal(0.5, 8.0, 0.1), eta, label="p3"),
+        SweepCase(FixedKController(n_workers=N, k=3), Exponential(), eta,
+                  label="f3"),
+    ]
+    run_sweep(_loss, jnp.zeros((D,)), data.X, data.y, cases=grid_c, **kw)
+    assert sweep_cache_stats()["traces"] == before + 1, (
+        "a new signature must compile exactly once"
+    )
+    run_sweep(_loss, jnp.zeros((D,)), data.X, data.y, cases=grid_c, **kw)
+    assert sweep_cache_stats()["traces"] == before + 1, (
+        "re-dispatching a known signature retraced"
+    )
+
+
+# ------------------------------------------- bitwise: specialized vs looped
+
+
+def test_specialized_and_unspecialized_bitwise_vs_looped(linreg):
+    """(c) the pruned program must change which branches are traced, never
+    the arithmetic of the branches that run: a mixed sync+kasync grid with
+    a sketched-Pflug cell and a variance-ratio cell is bitwise-equal to
+    looped run_monte_carlo under BOTH dispatch modes."""
+    data, eta = linreg
+    keys = jax.random.split(jax.random.PRNGKey(9), 3)
+    cases = [
+        SweepCase(SketchedPflugController(n_workers=N, k0=1, step=2, thresh=3,
+                                          burnin=5, sketch_dim=8),
+                  Exponential(rate=1.3), eta, label="sketched"),
+        SweepCase(FixedKController(n_workers=N, k=2), Pareto(0.5, 1.5), eta,
+                  label="kasync", mode="kasync"),
+        SweepCase(VarianceRatioController(n_workers=N, k0=1, step=2,
+                                          burnin=10),
+                  Exponential(rate=0.7), eta, label="vr"),
+    ]
+    for specialize in (True, False):
+        res = run_sweep(_loss, jnp.zeros((D,)), data.X, data.y, n_workers=N,
+                        cases=cases, num_iters=120, keys=keys, eval_every=40,
+                        specialize=specialize)
+        _assert_cells_match_looped(res, cases, data, keys, 120, 40)
+
+
+def test_single_controller_single_family_grid_bitwise(linreg):
+    """The maximally pruned program (one controller kind, sync only —
+    every controller/mode select statically folded) still matches the
+    looped engine."""
+    data, eta = linreg
+    keys = jax.random.split(jax.random.PRNGKey(4), 3)
+    cases = [
+        SweepCase(FixedKController(n_workers=N, k=2), Exponential(1.0), eta,
+                  label="k2"),
+        SweepCase(FixedKController(n_workers=N, k=7), Exponential(0.5), eta,
+                  label="k7"),
+    ]
+    res = run_sweep(_loss, jnp.zeros((D,)), data.X, data.y, n_workers=N,
+                    cases=cases, num_iters=100, keys=keys, eval_every=50)
+    _assert_cells_match_looped(res, cases, data, keys, 100, 50)
+
+
+# ------------------------------------------------------------ unroll tuning
+
+
+def test_unroll_never_affects_arithmetic(linreg):
+    """Trajectories are bitwise-identical across explicit unroll values and
+    the signature-derived default (unroll=None)."""
+    data, eta = linreg
+    keys = jax.random.split(jax.random.PRNGKey(6), 2)
+    cases = [
+        SweepCase(PflugController(n_workers=N, k0=2, step=2, thresh=5),
+                  Exponential(1.0), eta, label="p"),
+        SweepCase(FixedKController(n_workers=N, k=3), Pareto(0.5, 1.5), eta,
+                  label="f", mode="kasync"),
+    ]
+    outs = []
+    for unroll in (None, 1, 8):
+        res = run_sweep(_loss, jnp.zeros((D,)), data.X, data.y, n_workers=N,
+                        cases=cases, num_iters=90, keys=keys, eval_every=30,
+                        unroll=unroll)
+        outs.append(res)
+    for other in outs[1:]:
+        for name in ("time", "loss", "k"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(outs[0], name)),
+                np.asarray(getattr(other, name)),
+                err_msg=f"{name} depends on unroll",
+            )
+
+
+def test_auto_unroll_heuristic(linreg):
+    """The signature-derived unroll tiers: deepest for pruned sync-only
+    single-controller programs, moderate for sync-only multi-controller
+    grids, the measured big-body sweet spot (4) once async is present."""
+    _, eta = linreg
+    lean = [SweepCase(FixedKController(n_workers=N, k=2), Exponential(), eta)]
+    multi_ctrl = [
+        SweepCase(FixedKController(n_workers=N, k=2), Exponential(), eta,
+                  label="f"),
+        SweepCase(PflugController(n_workers=N, k0=1, step=1, thresh=3),
+                  Exponential(), eta, label="p"),
+    ]
+    mixed = [
+        SweepCase(FixedKController(n_workers=N, k=2), Exponential(), eta,
+                  label="s"),
+        SweepCase(PflugController(n_workers=N, k0=1, step=1, thresh=3),
+                  Exponential(), eta, label="a", mode="kasync"),
+    ]
+    assert _auto_unroll(grid_signature(lean, N)) == 8
+    assert _auto_unroll(grid_signature(multi_ctrl, N)) == 6
+    assert _auto_unroll(grid_signature(mixed, N)) == 4

@@ -105,11 +105,16 @@ def test_schedule_variance_ratio_and_comm_cells_bitwise(linreg):
 
 
 def test_sweep_program_is_grid_composition_agnostic(linreg):
-    """Kinds/hyperparams are traced leaves: swapping which controllers and
-    stragglers populate an equally-shaped grid must NOT retrace."""
+    """Kinds/hyperparams are traced leaves: under ``specialize=False`` (the
+    fully-grid-agnostic program family) swapping which controllers and
+    stragglers populate an equally-shaped grid must NOT retrace.  (The
+    default ``specialize=True`` instead caches per branch signature —
+    same-SIGNATURE repopulation never retraces; tests/test_specialize.py
+    pins that contract.)"""
     data, eta = linreg
     keys = jax.random.split(jax.random.PRNGKey(1), 3)
-    kw = dict(n_workers=N, num_iters=80, keys=keys, eval_every=40)
+    kw = dict(n_workers=N, num_iters=80, keys=keys, eval_every=40,
+              specialize=False)
     grid_a = [
         SweepCase(FixedKController(n_workers=N, k=2), Exponential(rate=1.0), eta),
         SweepCase(PflugController(n_workers=N, k0=1, step=1, thresh=3), Pareto(), eta),
