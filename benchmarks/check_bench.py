@@ -24,6 +24,11 @@ Three rules:
   jitted renewal engine regressing to host-loop-like throughput means its
   scan hot path broke.
 
+The record may also carry an OPTIONAL ``lm`` section (fig_lm merges one in:
+``{cells, replicas, iters, smoke, dispatch_s, final_ce}``).  Absent it is
+ignored; present it is schema-checked — positive dispatch time, finite
+positive final CE — so a broken LM-grid run fails loudly.
+
 File hygiene: the **repo-root** ``BENCH_sweep.json`` is the committed
 full-grid baseline; ``results/BENCH_sweep.json`` is scratch output of the
 latest bench run.  Pointing the BASELINE argument at the scratch copy (or
@@ -89,6 +94,28 @@ def baseline_record_error(baseline: dict) -> str | None:
     return None
 
 
+def lm_section_error(rec: dict) -> str | None:
+    """Schema-check the OPTIONAL ``lm`` section (fig_lm merges it into the
+    record).  Absent is fine — the quadratic-grid rules above don't need it;
+    present-but-malformed is a hard error so a broken fig_lm merge can't
+    masquerade as 'ran clean'."""
+    lm = rec.get("lm")
+    if lm is None:
+        return None
+    required = {"cells": int, "replicas": int, "iters": int,
+                "dispatch_s": (int, float), "final_ce": (int, float)}
+    for key, typ in required.items():
+        if key not in lm:
+            return f"lm section missing key {key!r} (has {sorted(lm)})"
+        if not isinstance(lm[key], typ) or isinstance(lm[key], bool):
+            return f"lm section key {key!r} has wrong type {type(lm[key]).__name__}"
+    if lm["dispatch_s"] <= 0:
+        return f"lm dispatch_s must be positive, got {lm['dispatch_s']}"
+    if not (0 < lm["final_ce"] == lm["final_ce"]):  # positive and not NaN
+        return f"lm final_ce must be positive and finite, got {lm['final_ce']}"
+    return None
+
+
 def check(
     current: dict, baseline: dict, max_ratio: float,
     min_async_speedup: float = 5.0,
@@ -136,12 +163,20 @@ def check(
             f"vs host {async_rec.get('host_s')}s for "
             f"{async_rec.get('host_updates')}"
         )
+    lm_err = lm_section_error(current)
+    if lm_err:
+        return lm_err
+    lm = current.get("lm")
+    lm_note = (
+        f"; lm grid {lm['cells']}x{lm['replicas']} in {lm['dispatch_s']:.1f}s "
+        f"(final_ce={lm['final_ce']:.3f})" if lm else ""
+    )
     print(
         f"check_bench OK: warm {cur_warm:.3f}s vs baseline {base_warm:.3f}s "
         f"({ratio:.2f}x, {kind}, limit {max_ratio}x); warm sweep "
         f"{warm_speedup:.2f}x warm looped (floor {min_warm_speedup}x); "
         f"async engine {async_speedup:.0f}x host loop "
-        f"(floor {min_async_speedup}x)"
+        f"(floor {min_async_speedup}x){lm_note}"
     )
     return None
 

@@ -16,6 +16,7 @@ from benchmarks import (  # noqa: E402
     fig3,
     fig_async,
     fig_hetero,
+    fig_lm,
     kernels_bench,
     roofline_table,
     sweep_bench,
@@ -36,6 +37,9 @@ def main() -> None:
                                              bench_iters=None)]),
         ("ablation", lambda: [ablation.run("results/ablation.csv")]),
         ("sweep", lambda: [sweep_bench.run("results/BENCH_sweep.json")]),
+        # after sweep_bench so the 'lm' section merges into its fresh record
+        ("fig_lm", lambda: [fig_lm.run("results/fig_lm.csv",
+                                       bench_json="results/BENCH_sweep.json")]),
         ("kernels", kernels_bench.run),
         ("roofline", lambda: [roofline_table.run()]),
     ]

@@ -6,6 +6,14 @@ This exercises the FULL production path — build_model, sharded train_step,
 the in-graph straggler simulation, the Pflug controller, checkpointing —
 just on a host mesh instead of the pod.
 
+The train step here is traced from the SAME per-mode builders the simulation
+engines use (``repro.core.execmode.make_mode_steps``, threaded through
+``launch/steps.make_train_step``): the straggler draw, renewal clock,
+fastest-K ranking and controller update are one shared implementation, with
+the LM loss plugged in as a gradient source and the real optimizer through
+the ``apply_update`` hook.  What this script trains is therefore the same
+loop body ``benchmarks/fig_lm.py`` sweeps — just sharded and checkpointed.
+
     PYTHONPATH=src python examples/train_lm_adaptive.py [--steps 300]
 """
 

@@ -6,6 +6,10 @@ Modules:
                  rate schedules (RateSchedule) and the per-slot packed-
                  parameter protocol behind the sweep engine
   aggregation  — fastest-k masks / per-example weights / renewal clock
+  gradsource   — pluggable gradient sources (GradSource protocol): the
+                 engines' loss abstraction; PerExampleSource is the
+                 reference per-example path, repro.launch.lm_source.LMSource
+                 wraps a real LM train step
   controller   — Algorithm-1 Pflug controller, sketched Pflug, fixed-k,
                  Theorem-1 schedule, variance-ratio (beyond paper)
   theory       — Lemma-1 bound, Theorem-1 switching times (Example 1 / Fig 1)
@@ -42,9 +46,10 @@ opaque pytree threaded through the scan carry, so new policies need only
 ``init``/``update``.
 """
 
-from repro.core import aggregation, controller, execmode, montecarlo, straggler, theory  # noqa: F401
+from repro.core import aggregation, controller, execmode, gradsource, montecarlo, straggler, theory  # noqa: F401
 from repro.core.aggregation import CommModel, fastest_k_mask, iteration_time  # noqa: F401
 from repro.core.execmode import MODES, ExecStats  # noqa: F401
+from repro.core.gradsource import GradSource, PerExampleSource, SourceFns  # noqa: F401
 from repro.core.controller import (  # noqa: F401
     FixedKController,
     PflugController,
@@ -53,7 +58,12 @@ from repro.core.controller import (  # noqa: F401
     VarianceRatioController,
     get_controller,
 )
-from repro.core.montecarlo import MonteCarloResult, run_monte_carlo, summarize  # noqa: F401
+from repro.core.montecarlo import (  # noqa: F401
+    MonteCarloResult,
+    run_monte_carlo,
+    run_monte_carlo_source,
+    summarize,
+)
 from repro.core.straggler import (  # noqa: F401
     RateSchedule,
     WorkerFleet,
@@ -64,5 +74,6 @@ from repro.core.sweep import (  # noqa: F401
     SweepResult,
     product_cases,
     run_sweep,
+    run_sweep_source,
     summarize_cells,
 )

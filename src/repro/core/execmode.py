@@ -121,9 +121,16 @@ class ExecCarry(NamedTuple):
     ctrl_state: Any
     sim_time: jax.Array
     key: jax.Array
+    # Optimizer state for callers that plug a stateful update rule in via
+    # ``apply_update`` (the launch train step).  None — an empty pytree
+    # node, zero leaves — for the sim engines' plain SGD, so the carried
+    # structure (and every compiled sim program) is unchanged by the field.
+    opt_state: Any = None
 
 
-def init_exec_carry(params0, n_slots: int, ctrl_state, key: jax.Array) -> ExecCarry:
+def init_exec_carry(
+    params0, n_slots: int, ctrl_state, key: jax.Array, opt_state: Any = None
+) -> ExecCarry:
     """t = 0: every worker is about to be dispatched from params0."""
     worker_params = jax.tree.map(
         lambda p: jnp.broadcast_to(p[None], (n_slots,) + p.shape), params0
@@ -137,6 +144,7 @@ def init_exec_carry(params0, n_slots: int, ctrl_state, key: jax.Array) -> ExecCa
         ctrl_state=ctrl_state,
         sim_time=jnp.asarray(0.0, jnp.float32),
         key=key,
+        opt_state=opt_state,
     )
 
 
@@ -145,12 +153,18 @@ def _slot_bcast(mask: jax.Array, like: jax.Array) -> jax.Array:
     return mask.reshape(mask.shape + (1,) * (like.ndim - 1))
 
 
-def make_stale_grad_fns(per_example_loss_fn: Callable, Xw, yw, n_slots: int):
+def make_stale_grad_fns(
+    per_example_loss_fn: Callable, Xw, yw, n_slots: int,
+    stale_weighted_loss: Callable | None = None,
+):
     """The stale-gradient machinery of the async modes, built ONCE here so
     both engines trace identical ops (the bitwise sweep-vs-looped contract).
 
     ``Xw``/``yw`` are the worker-major data reshaped to a leading
-    ``(n_slots, s)`` axis.  Returns ``(stale_grad, shard_grad_at)``:
+    ``(n_slots, s)`` axis.  ``stale_weighted_loss`` defaults to the eq.-(2)
+    aggregate in ``repro.core.aggregation``; gradient sources pass their own
+    method (same formula, source-owned).  Returns
+    ``(stale_grad, shard_grad_at)``:
 
     * ``stale_grad(worker_params, mask_f32, k)`` — the master's K-async
       update direction: each slot's per-example losses are evaluated at that
@@ -161,10 +175,12 @@ def make_stale_grad_fns(per_example_loss_fn: Callable, Xw, yw, n_slots: int):
     * ``shard_grad_at(worker_params, i)`` — one slot's stale partial
       gradient (the K-batch inner-event form; ``i`` may be traced).
     """
+    if stale_weighted_loss is None:
+        stale_weighted_loss = aggregation.stale_weighted_loss
 
     def stale_loss(worker_params, mask, k):
         losses = jax.vmap(per_example_loss_fn)(worker_params, Xw, yw)
-        return aggregation.stale_weighted_loss(losses.reshape(n_slots, -1), mask, k)
+        return stale_weighted_loss(losses.reshape(n_slots, -1), mask, k)
 
     stale_grad_stack = jax.grad(stale_loss)
 
@@ -215,6 +231,7 @@ def make_mode_prelude_and_tails(
     eta,  # f32 scalar (python float or traced leaf)
     ctrl_update: Callable,  # ctrl_update(state, g, sim_time, stats) -> (state, k)
     ctrl_k: Callable = lambda s: s.k,  # current K from the controller state
+    apply_update: Callable | None = None,  # (params, g, opt_state) -> (params, opt_state)
 ):
     """The execution modes factored as (shared prelude, per-mode tails).
 
@@ -233,7 +250,23 @@ def make_mode_prelude_and_tails(
     versus a zero ``CommModel``).  All leaves the caller closes over
     (straggler rows, eta, comm, controller hyperparameters) may be traced —
     nothing here branches on values in Python.
+
+    ``apply_update`` is the parameter-update hook:
+    ``apply_update(params, g, opt_state) -> (new_params, new_opt_state)``.
+    The default is the sim engines' plain SGD step — the identical
+    ``p - eta * g`` tree map the tails historically inlined, with
+    ``opt_state`` passed through untouched (``None`` for sim carries) — so
+    omitting it is a bitwise no-op.  The launch train step plugs a real
+    optimizer in here, which is what lets training and simulation share
+    these step functions.
     """
+    if apply_update is None:
+
+        def apply_update(params, g, opt_state):
+            return (
+                jax.tree.map(lambda pa, gi: pa - eta * gi, params, g),
+                opt_state,
+            )
 
     def prelude(carry: ExecCarry) -> ModePrelude:
         new_key, sub = jax.random.split(carry.key)
@@ -257,13 +290,13 @@ def make_mode_prelude_and_tails(
         # carry fields pass through untouched (bitwise identity).
         k = p.k
         g = sync_grad(carry.params, p.arrive_f, k)
-        params = jax.tree.map(lambda pa, gi: pa - eta * gi, carry.params, g)
+        params, opt_state = apply_update(carry.params, g, carry.opt_state)
         sim_time = carry.sim_time + p.t_iter
         ctrl_state, _ = ctrl_update(carry.ctrl_state, g, sim_time, zero_stats(k))
         return (
             carry._replace(
                 params=params, ctrl_state=ctrl_state, sim_time=sim_time,
-                key=p.new_key,
+                key=p.new_key, opt_state=opt_state,
             ),
             k,
         )
@@ -276,7 +309,7 @@ def make_mode_prelude_and_tails(
         remaining, arrive_f, t_iter = p.remaining, p.arrive_f, p.t_iter
         arrive = arrive_f.astype(bool)
         g = stale_grad(carry.worker_params, arrive_f, k)
-        params = jax.tree.map(lambda pa, gi: pa - eta * gi, carry.params, g)
+        params, opt_state = apply_update(carry.params, g, carry.opt_state)
         sim_time = carry.sim_time + t_iter
         kf = k.astype(jnp.float32)
         stats = ExecStats(
@@ -309,6 +342,7 @@ def make_mode_prelude_and_tails(
                 ctrl_state=ctrl_state,
                 sim_time=sim_time,
                 key=new_key,
+                opt_state=opt_state,
             ),
             k,
         )
@@ -381,7 +415,7 @@ def make_mode_prelude_and_tails(
             jax.lax.scan(inner, init, jnp.arange(n_slots))
         )
         g = jax.tree.map(lambda x: x / kf, gsum)
-        params = jax.tree.map(lambda pa, gi: pa - eta * gi, carry.params, g)
+        params, opt_state = apply_update(carry.params, g, carry.opt_state)
         t_iter = tau_sum if comm_time is None else tau_sum + comm_time(k)
         sim_time = carry.sim_time + t_iter
         stats = ExecStats(
@@ -407,6 +441,7 @@ def make_mode_prelude_and_tails(
                 ctrl_state=ctrl_state,
                 sim_time=sim_time,
                 key=new_key,
+                opt_state=opt_state,
             ),
             k,
         )
@@ -425,6 +460,7 @@ def make_mode_steps(
     eta,
     ctrl_update: Callable,
     ctrl_k: Callable = lambda s: s.k,
+    apply_update: Callable | None = None,
 ):
     """The three full execution-mode step functions over a shared ``ExecCarry``.
 
@@ -438,7 +474,7 @@ def make_mode_steps(
     prelude, tails = make_mode_prelude_and_tails(
         n_slots=n_slots, draw=draw, sync_grad=sync_grad, stale_grad=stale_grad,
         shard_grad_at=shard_grad_at, comm_time=comm_time, eta=eta,
-        ctrl_update=ctrl_update, ctrl_k=ctrl_k,
+        ctrl_update=ctrl_update, ctrl_k=ctrl_k, apply_update=apply_update,
     )
     return tuple(
         (lambda carry, _tail=tail: _tail(carry, prelude(carry))) for tail in tails

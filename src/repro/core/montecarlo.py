@@ -13,18 +13,28 @@ compiled XLA program:
     single policy-agnostic carry (the controller contributes an opaque
     pytree state via its ``init``/``update`` interface).
 
-Compiled programs are cached at module level, keyed on everything that is
-baked into the trace (loss fn, n_workers, controller/straggler/comm values,
-eta, iteration counts, unroll): repeated calls with the same configuration —
-a looped grid, a benchmark's warm-up + timed run — reuse the first trace
-instead of rebuilding ``jit(vmap(run_one))`` per call.  Data (params0, X, y,
+The gradient source is pluggable (``repro.core.gradsource.GradSource``):
+the engine consumes only the closures the source builds — a masked eq.-(2)
+aggregate gradient, stale per-worker-shard gradients for the async modes,
+and the eval losses.  ``run_monte_carlo`` keeps the historical per-example
+``(loss_fn, X, y)`` signature as a thin wrapper over the reference
+``PerExampleSource``; ``run_monte_carlo_source`` is the generic entry point
+(e.g. ``repro.launch.lm_source.LMSource`` for a real LM train step).
+
+Compiled programs are cached at module level in a bounded LRU (so long-lived
+sweep processes don't accumulate executables without limit), keyed on
+everything baked into the trace (the source's ``cache_token()``, n_workers,
+controller/straggler/comm values, eta, iteration counts, unroll): repeated
+calls with the same configuration — a looped grid, a benchmark's warm-up +
+timed run — reuse the first trace instead of rebuilding
+``jit(vmap(run_one))`` per call.  Data (params0, the source's data pytree,
 keys) are traced *arguments*, so jit's own shape cache handles varying
 shapes per configuration.
 
 The per-iteration hot path samples and ranks worker times once
 (``aggregation.fastest_k_draw``) and computes the eq.-(2) weighted gradient
-through a per-worker segment sum (``aggregation.fastest_k_weighted_loss``)
-— no length-m per-example weight vector is ever materialized.
+through a per-worker segment sum (the source's ``weighted_loss``) — no
+length-m per-example weight vector is ever materialized.
 
 ``repro.core.simulate.simulate_fastest_k`` is a thin R=1 wrapper over this
 engine; benchmarks drive it directly with R >= 32, and whole controller x
@@ -43,6 +53,7 @@ API sketch::
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import inspect
 import math
@@ -53,6 +64,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aggregation, execmode
+from repro.core.gradsource import GradSource, PerExampleSource
 from repro.core.straggler import (
     StragglerModel,
     WorkerFleet,
@@ -65,6 +77,7 @@ from repro.core.straggler import (
 __all__ = [
     "MonteCarloResult",
     "run_monte_carlo",
+    "run_monte_carlo_source",
     "summarize",
     "program_cache_stats",
     "clear_program_cache",
@@ -124,8 +137,42 @@ def _hashable(obj):
         return repr(obj)
 
 
-# config-key -> jitted (params0, X, y, keys) -> (times, losses, ks).
-_PROGRAM_CACHE: dict = {}
+class _LRUProgramCache:
+    """Bounded least-recently-used compiled-program cache.
+
+    Long-lived sweep/benchmark processes touch many configurations; an
+    unbounded dict would pin every compiled executable (and its device
+    buffers) for the process lifetime.  Eviction just drops the jitted
+    callable — re-entering an evicted configuration retraces exactly once
+    (pinned by tests/test_program_cache.py).  ``maxsize`` is mutable so
+    tests can shrink it.
+    """
+
+    def __init__(self, maxsize: int = 32):
+        self.maxsize = maxsize
+        self._entries: collections.OrderedDict = collections.OrderedDict()
+
+    def get(self, key):
+        entry = self._entries.get(key)
+        if entry is not None:
+            self._entries.move_to_end(key)
+        return entry
+
+    def __setitem__(self, key, value):
+        self._entries[key] = value
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.maxsize:
+            self._entries.popitem(last=False)
+
+    def __len__(self):
+        return len(self._entries)
+
+    def clear(self):
+        self._entries.clear()
+
+
+# config-key -> jitted (params0, data, keys) -> (times, losses, ks).
+_PROGRAM_CACHE = _LRUProgramCache(maxsize=32)
 # Incremented inside the traced function body, i.e. once per actual trace.
 # Tests assert a second identical call leaves this unchanged.
 _N_TRACES = 0
@@ -143,7 +190,7 @@ def clear_program_cache() -> None:
 
 
 def _build_program(
-    per_example_loss_fn: Callable,
+    source: GradSource,
     n_workers: int,
     controller,
     straggler: StragglerModel,
@@ -166,16 +213,11 @@ def _build_program(
         n_knots = len(straggler.schedule.times) if straggler.schedule else 0
         sched_np = pack_schedule(straggler.schedule, max(1, n_knots))
 
-    def run_all(params0, X, y, keys, n_active_arg=None):
+    def run_all(params0, data, keys, n_active_arg=None):
         global _N_TRACES
         _N_TRACES += 1  # Python side effect: fires once per trace, never per run
-        s = X.shape[0] // n_workers
-
-        def step_loss(params, mask, k):
-            losses = per_example_loss_fn(params, X, y)
-            return aggregation.fastest_k_weighted_loss(losses, mask, k, s)
-
-        grad_fn = jax.grad(step_loss)
+        fns = source.build(data, n_workers)
+        grad_fn = fns.grad
 
         if is_fleet:
             pmat = jnp.asarray(pmat_np)
@@ -197,15 +239,12 @@ def _build_program(
                 return mask, t
 
             def mean_loss(params):
-                losses = per_example_loss_fn(params, X, y)
                 # n_active rides in as a traced argument, NOT a baked
                 # constant: a constant active mask lets XLA fold the masked
                 # eval reduction into a different summation order than the
                 # sweep engine's traced-leaf version, breaking bitwise
                 # equality in the last ulp.
-                return aggregation.active_worker_mean_loss(
-                    losses, n_active_arg, n_workers, s
-                )
+                return fns.eval_loss_active(params, n_active_arg)
 
         else:
 
@@ -213,8 +252,7 @@ def _build_program(
                 del sim_time
                 return aggregation.fastest_k_draw(straggler, sub, n_workers, k, comm)
 
-            def mean_loss(params):
-                return jnp.mean(per_example_loss_fn(params, X, y))
+            mean_loss = fns.eval_loss
 
         def one_step(carry: _Carry, _):
             new_key, sub = jax.random.split(carry.key)
@@ -266,7 +304,7 @@ def _build_program(
 
 
 def _build_async_program(
-    per_example_loss_fn: Callable,
+    source: GradSource,
     n_workers: int,
     controller,
     straggler: StragglerModel,
@@ -298,12 +336,13 @@ def _build_async_program(
     except (TypeError, ValueError):  # builtins / exotic callables
         accepts_stats = True
 
-    def run_all(params0, X, y, keys, n_active_arg=None):
+    def run_all(params0, data, keys, n_active_arg=None):
         global _N_TRACES
         _N_TRACES += 1
-        s = X.shape[0] // n_workers
-        Xw = X.reshape((n_workers, s) + X.shape[1:])
-        yw = y.reshape((n_workers, s) + y.shape[1:])
+        # build_stale goes FIRST: it emits the per-worker shard reshape at
+        # the exact op position the historical inline reshape occupied.
+        stale_grad, shard_grad_at = source.build_stale(data, n_workers)
+        fns = source.build(data, n_workers)
 
         if is_fleet:
             pmat = jnp.asarray(pmat_np)
@@ -317,10 +356,7 @@ def _build_async_program(
                 return sample_times_per_worker(kinds, pm, sub)
 
             def mean_loss(params):
-                losses = per_example_loss_fn(params, X, y)
-                return aggregation.active_worker_mean_loss(
-                    losses, n_active_arg, n_workers, s
-                )
+                return fns.eval_loss_active(params, n_active_arg)
 
         else:
 
@@ -328,16 +364,7 @@ def _build_async_program(
                 del sim_time
                 return straggler.sample(sub, n_workers)
 
-            def mean_loss(params):
-                return jnp.mean(per_example_loss_fn(params, X, y))
-
-        def step_loss(params, mask, k):
-            losses = per_example_loss_fn(params, X, y)
-            return aggregation.fastest_k_weighted_loss(losses, mask, k, s)
-
-        stale_grad, shard_grad_at = execmode.make_stale_grad_fns(
-            per_example_loss_fn, Xw, yw, n_workers
-        )
+            mean_loss = fns.eval_loss
 
         # comm=None statically omits the receive-cost adds (a bitwise no-op
         # versus adding a zero CommModel's 0.0 — see make_mode_prelude_and_tails).
@@ -354,7 +381,7 @@ def _build_async_program(
         steps = execmode.make_mode_steps(
             n_slots=n_workers,
             draw=draw,
-            sync_grad=jax.grad(step_loss),
+            sync_grad=fns.grad,
             stale_grad=stale_grad,
             shard_grad_at=shard_grad_at,
             comm_time=comm_time,
@@ -395,6 +422,94 @@ def _build_async_program(
     return jax.jit(run_all)
 
 
+def run_monte_carlo_source(
+    source: GradSource,
+    params0,
+    data,
+    n_workers: int,
+    controller,
+    straggler: StragglerModel | WorkerFleet,
+    eta: float,
+    num_iters: int,
+    keys: jax.Array | None = None,
+    key: jax.Array | None = None,
+    n_replicas: int | None = None,
+    comm: aggregation.CommModel | None = None,
+    eval_every: int = 10,
+    unroll: int = 8,
+    mode: str = "sync",
+) -> MonteCarloResult:
+    """Run R fastest-k SGD replicas of an arbitrary ``GradSource``.
+
+    ``data`` is the source's data pytree (e.g. ``(X, y)`` for
+    ``PerExampleSource``, a token batch dict for ``LMSource``), threaded
+    through the compiled program as a traced argument.  Everything else —
+    replica semantics, execution modes, controllers, heterogeneous fleets —
+    matches ``run_monte_carlo`` (whose docstring carries the details); that
+    function is literally a wrapper over this one with the reference
+    per-example source.
+    """
+    if keys is None:
+        if key is None or n_replicas is None:
+            raise ValueError("pass either keys=(R keys) or key= and n_replicas=")
+        keys = jax.random.split(key, n_replicas)
+    source.check(data, n_workers)
+    if eval_every <= 0:
+        raise ValueError(f"eval_every must be positive, got {eval_every}")
+    if num_iters <= 0:
+        raise ValueError(f"num_iters must be positive, got {num_iters}")
+    if mode not in execmode.MODES:
+        raise ValueError(
+            f"unknown mode {mode!r}; options {sorted(execmode.MODES)}"
+        )
+    if isinstance(straggler, WorkerFleet):
+        # Mirror sweep._cell_of: a controller sized to more workers than the
+        # fleet has active would wait on +inf inactive slots once k exceeds
+        # n_active, silently saturating every trajectory's clock to inf.
+        cn = getattr(controller, "n_workers", None)
+        if cn is not None and cn != straggler.n_active:
+            raise ValueError(
+                f"fleet has {straggler.n_active} models but "
+                f"controller.n_workers={cn}"
+            )
+
+    cache_key = (
+        source.cache_token(),
+        n_workers,
+        _hashable(controller),
+        _hashable(straggler),
+        _hashable(comm),
+        float(eta),
+        int(num_iters),
+        int(eval_every),
+        int(unroll),
+        str(mode),
+    )
+    program = _PROGRAM_CACHE.get(cache_key)
+    if program is None:
+        if mode == "sync":
+            program = _build_program(
+                source, n_workers, controller, straggler, comm,
+                eta, num_iters, eval_every, unroll,
+            )
+        else:
+            program = _build_async_program(
+                source, n_workers, controller, straggler, comm,
+                eta, num_iters, eval_every, unroll, mode,
+            )
+        _PROGRAM_CACHE[cache_key] = program
+    if isinstance(straggler, WorkerFleet):
+        times, losses, ks = program(
+            params0, data, keys, jnp.asarray(straggler.n_active, jnp.int32)
+        )
+    else:
+        times, losses, ks = program(params0, data, keys)
+    iteration = np.minimum(
+        np.arange(1, times.shape[1] + 1) * eval_every, num_iters
+    ).astype(np.int64)
+    return MonteCarloResult(time=times, loss=losses, k=ks, iteration=iteration)
+
+
 def run_monte_carlo(
     per_example_loss_fn: Callable,  # (params, X, y) -> per-example losses (m,)
     params0,
@@ -414,6 +529,10 @@ def run_monte_carlo(
     mode: str = "sync",
 ) -> MonteCarloResult:
     """Run R independent fastest-k SGD replicas in one jitted program.
+
+    Thin wrapper over ``run_monte_carlo_source`` with the reference
+    ``PerExampleSource`` — the historical per-example quadratic path, pinned
+    bitwise-equal to the pre-GradSource engine in every mode.
 
     Replicas are specified either by ``keys`` (an array of R PRNG keys,
     vmapped over axis 0) or by ``key`` + ``n_replicas`` (split internally).
@@ -448,67 +567,23 @@ def run_monte_carlo(
     ground truth the sweep engine's heterogeneous cells are pinned against;
     plain ``StragglerModel`` configurations are untouched by it.
     """
-    if keys is None:
-        if key is None or n_replicas is None:
-            raise ValueError("pass either keys=(R keys) or key= and n_replicas=")
-        keys = jax.random.split(key, n_replicas)
-    m = X.shape[0]
-    if m % n_workers:
-        raise ValueError(f"m={m} not divisible by n_workers={n_workers}")
-    if eval_every <= 0:
-        raise ValueError(f"eval_every must be positive, got {eval_every}")
-    if num_iters <= 0:
-        raise ValueError(f"num_iters must be positive, got {num_iters}")
-    if mode not in execmode.MODES:
-        raise ValueError(
-            f"unknown mode {mode!r}; options {sorted(execmode.MODES)}"
-        )
-    if isinstance(straggler, WorkerFleet):
-        # Mirror sweep._cell_of: a controller sized to more workers than the
-        # fleet has active would wait on +inf inactive slots once k exceeds
-        # n_active, silently saturating every trajectory's clock to inf.
-        cn = getattr(controller, "n_workers", None)
-        if cn is not None and cn != straggler.n_active:
-            raise ValueError(
-                f"fleet has {straggler.n_active} models but "
-                f"controller.n_workers={cn}"
-            )
-
-    cache_key = (
-        per_example_loss_fn,
-        n_workers,
-        _hashable(controller),
-        _hashable(straggler),
-        _hashable(comm),
-        float(eta),
-        int(num_iters),
-        int(eval_every),
-        int(unroll),
-        str(mode),
+    return run_monte_carlo_source(
+        PerExampleSource(per_example_loss_fn),
+        params0,
+        (X, y),
+        n_workers=n_workers,
+        controller=controller,
+        straggler=straggler,
+        eta=eta,
+        num_iters=num_iters,
+        keys=keys,
+        key=key,
+        n_replicas=n_replicas,
+        comm=comm,
+        eval_every=eval_every,
+        unroll=unroll,
+        mode=mode,
     )
-    program = _PROGRAM_CACHE.get(cache_key)
-    if program is None:
-        if mode == "sync":
-            program = _build_program(
-                per_example_loss_fn, n_workers, controller, straggler, comm,
-                eta, num_iters, eval_every, unroll,
-            )
-        else:
-            program = _build_async_program(
-                per_example_loss_fn, n_workers, controller, straggler, comm,
-                eta, num_iters, eval_every, unroll, mode,
-            )
-        _PROGRAM_CACHE[cache_key] = program
-    if isinstance(straggler, WorkerFleet):
-        times, losses, ks = program(
-            params0, X, y, keys, jnp.asarray(straggler.n_active, jnp.int32)
-        )
-    else:
-        times, losses, ks = program(params0, X, y, keys)
-    iteration = np.minimum(
-        np.arange(1, times.shape[1] + 1) * eval_every, num_iters
-    ).astype(np.int64)
-    return MonteCarloResult(time=times, loss=losses, k=ks, iteration=iteration)
 
 
 def summarize(result: MonteCarloResult) -> dict:

@@ -15,7 +15,6 @@ studied cheaply.
 
 from __future__ import annotations
 
-import warnings
 from typing import Callable, Dict, List
 
 import jax
@@ -25,9 +24,6 @@ from repro.core.montecarlo import run_monte_carlo
 from repro.core.straggler import StragglerModel
 
 __all__ = ["simulate_fastest_k"]
-
-_SENTINEL = object()  # distinguishes "chunk not passed" from any user value
-_warned_chunk = False
 
 
 def simulate_fastest_k(
@@ -43,7 +39,6 @@ def simulate_fastest_k(
     key: jax.Array,
     comm: aggregation.CommModel | None = None,
     eval_every: int = 10,
-    chunk=_SENTINEL,  # deprecated: eval is in-graph, nothing is chunked
     mode: str = "sync",
 ) -> Dict[str, List[float]]:
     """Run adaptive/fixed fastest-k SGD; returns {'time','loss','k'} history.
@@ -55,21 +50,10 @@ def simulate_fastest_k(
     ``"kbatch"`` the same call simulates the stale-gradient asynchronous
     family instead (one "iteration" = one master update of K arrivals).
 
-    ``chunk`` is dead: the engine evaluates in-graph, so nothing has been
-    chunked since the host loop was retired.  Passing it emits a one-time
-    ``DeprecationWarning`` and has no other effect.
+    The historical ``chunk`` argument is gone: the engine evaluates in-graph,
+    so nothing has been chunked since the host loop was retired.  Passing it
+    now raises ``TypeError`` like any other unknown keyword.
     """
-    if chunk is not _SENTINEL:
-        global _warned_chunk
-        if not _warned_chunk:
-            _warned_chunk = True
-            warnings.warn(
-                "simulate_fastest_k(chunk=...) is deprecated and ignored: "
-                "history is recorded in-graph at every eval_every iterations "
-                "exactly; drop the argument.",
-                DeprecationWarning,
-                stacklevel=2,
-            )
     result = run_monte_carlo(
         per_example_loss_fn,
         params0,

@@ -85,7 +85,8 @@ from repro.core.controller import (
     _tree_dot,
     _tree_zeros_like,
 )
-from repro.core.montecarlo import MonteCarloResult, summarize
+from repro.core.gradsource import GradSource, PerExampleSource
+from repro.core.montecarlo import MonteCarloResult, _LRUProgramCache, summarize
 from repro.core.straggler import (
     StragglerModel,
     WorkerFleet,
@@ -102,6 +103,7 @@ __all__ = [
     "SweepResult",
     "grid_signature",
     "run_sweep",
+    "run_sweep_source",
     "summarize_cells",
     "product_cases",
     "sweep_cache_stats",
@@ -706,12 +708,10 @@ class _SweepCarry(NamedTuple):
 
 
 def _make_run_one_moded(
-    per_example_loss_fn: Callable,
+    source: GradSource,
     n_workers: int,
-    s: int,
     params0,
-    X,
-    y,
+    data,
     grad_fn: Callable,
     mean_loss: Callable,
     sketch_dim: int,
@@ -739,11 +739,9 @@ def _make_run_one_moded(
     the fresh draw bit for bit), and the async tails are the SAME step code
     the looped ``run_monte_carlo(mode=...)`` traces — sweep cells stay
     bitwise-equal to the looped engine in every mode."""
-    Xw = X.reshape((n_workers, s) + X.shape[1:])
-    yw = y.reshape((n_workers, s) + y.shape[1:])
-    stale_grad, shard_grad_at = execmode.make_stale_grad_fns(
-        per_example_loss_fn, Xw, yw, n_workers
-    )
+    # build_stale emits the per-worker shard reshape at the exact op position
+    # the historical inline reshape occupied (bitwise contract).
+    stale_grad, shard_grad_at = source.build_stale(data, n_workers)
     modes = sig.modes
     mode_remap = (
         None if len(modes) in (1, len(execmode.MODES))
@@ -832,12 +830,14 @@ def _make_run_one_moded(
     return run_one
 
 
-# (loss_fn, n_workers, num_iters, eval_every, unroll, n_switch_slots,
-#  n_sched_slots, sketch_dim, partition, ndev, GridSignature) -> jitted flat
-# program.  Jit's own cache handles shapes (grid size, params/X/y shapes)
-# under each entry; the signature key is what makes same-signature grid
-# repopulation a cache hit and a new signature exactly one new trace.
-_PROGRAM_CACHE: dict = {}
+# (source.cache_token(), n_workers, num_iters, eval_every, unroll,
+#  n_switch_slots, n_sched_slots, sketch_dim, partition, ndev, GridSignature)
+# -> jitted flat program.  Jit's own cache handles shapes (grid size,
+# params/data shapes) under each entry; the signature key is what makes
+# same-signature grid repopulation a cache hit and a new signature exactly
+# one new trace.  Bounded LRU (shared implementation with montecarlo):
+# eviction + re-entry retraces exactly once.
+_PROGRAM_CACHE = _LRUProgramCache(maxsize=32)
 _N_TRACES = 0
 
 
@@ -852,7 +852,7 @@ def clear_sweep_cache() -> None:
 
 
 def _build_flat_program(
-    per_example_loss_fn: Callable,
+    source: GradSource,
     n_workers: int,
     num_iters: int,
     eval_every: int,
@@ -868,24 +868,18 @@ def _build_flat_program(
     # async mode in the signature selects the unified ExecCarry program.
     with_async = sig.modes != (execmode.MODE_SYNC,)
 
-    def make_run_one(params0, X, y):
+    def make_run_one(params0, data):
         """run_one closing over (possibly device-local) data — built inside
         the shard_map body so no tracers are captured across its boundary."""
-        s = X.shape[0] // n_workers
-
-        def step_loss(params, mask, k):
-            losses = per_example_loss_fn(params, X, y)
-            return aggregation.fastest_k_weighted_loss(losses, mask, k, s)
-
-        grad_fn = jax.grad(step_loss)
+        fns = source.build(data, n_workers)
+        grad_fn = fns.grad
 
         def mean_loss(params, n_active):
-            losses = per_example_loss_fn(params, X, y)
-            return aggregation.active_worker_mean_loss(losses, n_active, n_workers, s)
+            return fns.eval_loss_active(params, n_active)
 
         if with_async:
             return _make_run_one_moded(
-                per_example_loss_fn, n_workers, s, params0, X, y,
+                source, n_workers, params0, data,
                 grad_fn, mean_loss, sketch_dim, n_full, rem, eval_every, unroll,
                 sig,
             )
@@ -956,45 +950,43 @@ def _build_flat_program(
 
         return run_one
 
-    def run_flat(params0, X, y, cells: _CellParams, keys):
+    def run_flat(params0, data, cells: _CellParams, keys):
         global _N_TRACES
         _N_TRACES += 1
         if partition == "shard_map":
             from jax.experimental.shard_map import shard_map
 
-            def body(p0, Xl, yl, c, k):
-                return jax.vmap(make_run_one(p0, Xl, yl))(c, k)
+            def body(p0, d, c, k):
+                return jax.vmap(make_run_one(p0, d))(c, k)
 
             sharded = shard_map(
                 body,
                 mesh=mesh,
                 in_specs=(
                     jax.tree.map(lambda _: P(), params0),
-                    P(),
-                    P(),
+                    jax.tree.map(lambda _: P(), data),
                     jax.tree.map(lambda _: P("cells"), cells),
                     P("cells"),
                 ),
                 out_specs=P("cells"),
                 check_rep=False,
             )
-            return sharded(params0, X, y, cells, keys)
-        return jax.vmap(make_run_one(params0, X, y))(cells, keys)
+            return sharded(params0, data, cells, keys)
+        return jax.vmap(make_run_one(params0, data))(cells, keys)
 
     # The flat cell-leaf and key buffers are freshly materialized inside
     # every run_sweep dispatch (never caller-owned), so donating them lets
     # XLA reuse their allocations for the scan carries/outputs instead of
     # holding both live across the call.  CPU XLA has no donation support
     # (it would warn and ignore), so only accelerator backends request it.
-    donate = (3, 4) if jax.default_backend() in ("gpu", "tpu") else ()
+    donate = (2, 3) if jax.default_backend() in ("gpu", "tpu") else ()
     return jax.jit(run_flat, donate_argnums=donate)
 
 
-def run_sweep(
-    per_example_loss_fn: Callable,  # (params, X, y) -> per-example losses (m,)
+def run_sweep_source(
+    source: GradSource,
     params0,
-    X: jax.Array,
-    y: jax.Array,
+    data,
     n_workers: int,
     cases: Sequence[SweepCase],
     num_iters: int,
@@ -1009,6 +1001,12 @@ def run_sweep(
     specialize: bool = True,
 ) -> SweepResult:
     """Run a G-cell x R-replica grid of fastest-k SGD as ONE jitted dispatch.
+
+    Generic over the gradient source: ``data`` is the source's data pytree
+    (``(X, y)`` for ``PerExampleSource`` — ``run_sweep`` is the thin
+    per-example wrapper — a token batch dict for ``LMSource``), threaded
+    through the compiled program as a traced argument and replicated across
+    devices.
 
     ``n_workers`` is the grid's **slot count**: every cell is padded to it,
     and a cell's *active* worker count is its ``controller.n_workers``
@@ -1072,9 +1070,7 @@ def run_sweep(
         if key is None or n_replicas is None:
             raise ValueError("pass either keys=(R keys) or key= and n_replicas=")
         keys = jax.random.split(key, n_replicas)
-    m = X.shape[0]
-    if m % n_workers:
-        raise ValueError(f"m={m} not divisible by n_workers={n_workers}")
+    source.check(data, n_workers)
     if eval_every <= 0:
         raise ValueError(f"eval_every must be positive, got {eval_every}")
     if num_iters <= 0:
@@ -1148,11 +1144,10 @@ def run_sweep(
         flat_cells = jax.device_put(flat_cells, batched)
         flat_keys = jax.device_put(flat_keys, batched)
         params0 = jax.device_put(params0, replicated)
-        X = jax.device_put(X, replicated)
-        y = jax.device_put(y, replicated)
+        data = jax.device_put(data, replicated)
 
     cache_key = (
-        per_example_loss_fn,
+        source.cache_token(),
         n_workers,
         int(num_iters),
         int(eval_every),
@@ -1167,11 +1162,11 @@ def run_sweep(
     program = _PROGRAM_CACHE.get(cache_key)
     if program is None:
         program = _build_flat_program(
-            per_example_loss_fn, n_workers, num_iters, eval_every, unroll,
+            source, n_workers, num_iters, eval_every, unroll,
             sketch_dim, partition, mesh, sig,
         )
         _PROGRAM_CACHE[cache_key] = program
-    times, losses, ks = program(params0, X, y, flat_cells, flat_keys)
+    times, losses, ks = program(params0, data, flat_cells, flat_keys)
 
     n_evals = times.shape[1]
     times, losses, ks = (
@@ -1186,4 +1181,45 @@ def run_sweep(
         k=ks,
         iteration=iteration,
         labels=tuple(c.name() for c in cases),
+    )
+
+
+def run_sweep(
+    per_example_loss_fn: Callable,  # (params, X, y) -> per-example losses (m,)
+    params0,
+    X: jax.Array,
+    y: jax.Array,
+    n_workers: int,
+    cases: Sequence[SweepCase],
+    num_iters: int,
+    keys: jax.Array | None = None,
+    key: jax.Array | None = None,
+    n_replicas: int | None = None,
+    eval_every: int = 10,
+    unroll: int | None = None,
+    n_switch_slots: int | None = None,
+    n_sched_slots: int | None = None,
+    partition: str = "auto",
+    specialize: bool = True,
+) -> SweepResult:
+    """The historical per-example entry point: a thin wrapper over
+    ``run_sweep_source`` with the reference ``PerExampleSource`` and
+    ``data=(X, y)``, pinned bitwise-equal to the pre-GradSource engine.
+    See ``run_sweep_source`` for semantics."""
+    return run_sweep_source(
+        PerExampleSource(per_example_loss_fn),
+        params0,
+        (X, y),
+        n_workers=n_workers,
+        cases=cases,
+        num_iters=num_iters,
+        keys=keys,
+        key=key,
+        n_replicas=n_replicas,
+        eval_every=eval_every,
+        unroll=unroll,
+        n_switch_slots=n_switch_slots,
+        n_sched_slots=n_sched_slots,
+        partition=partition,
+        specialize=specialize,
     )

@@ -1,0 +1,115 @@
+"""LMSource: a real jitted LM train step as a pluggable gradient source.
+
+This is the credibility jump ROADMAP item 4 asks for: the adaptive fastest-k
+machinery (every controller, every execution mode, both dispatch engines)
+running around a *real* model loss instead of the quadratic toy.  The source
+wraps a registered architecture's ``model.loss_fn`` (per-row next-token
+cross-entropy) behind the same per-example interface the engines already
+consume:
+
+  * workers = contiguous worker-major row shards of one token batch
+    (``data = (tokens, targets)``, both (rows, seq_len) int32) — exactly the
+    horizontal partition ``launch/steps.make_train_step`` trains with;
+  * the eq.-(2) masked aggregate, the stale per-snapshot shard gradients,
+    and the eval CE all delegate to ``PerExampleSource`` over the
+    ``per_row_loss_fn`` adapter (``repro.launch.steps``) — the engines and
+    the launch trainer literally share one loss path;
+  * the model is memoized per (arch, smoke, overrides), so repeated source
+    instances hit the engines' program caches (``cache_token`` carries the
+    same triple).
+
+Typical use (the fig_lm benchmark)::
+
+    src = LMSource(arch="qwen1.5-0.5b", smoke=True,
+                   overrides=(("n_layers", 2), ("d_model", 64)))
+    params0 = src.init_params(jax.random.PRNGKey(0))
+    data = src.make_data(n_rows=32, seq_len=32, seed=0)
+    result = run_sweep_source(src, params0, data, n_workers=16, cases=cases,
+                              num_iters=600, key=key, n_replicas=8,
+                              eval_every=30)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Hashable, Tuple
+
+import jax
+
+from repro.configs import get_config, get_smoke_config
+from repro.core.gradsource import PerExampleSource, SourceFns
+from repro.data import TokenStream
+from repro.launch.steps import per_row_loss_fn
+from repro.models import build_model
+from repro.models.model import Model
+
+__all__ = ["LMSource"]
+
+
+@functools.lru_cache(maxsize=8)
+def _model_for(arch: str, smoke: bool, overrides: Tuple[Tuple[str, Any], ...]) -> Model:
+    """One Model per configuration: equal LMSource instances must close over
+    the same model object so their traced programs (and init params) agree."""
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**dict(overrides))
+    return build_model(cfg)
+
+
+@dataclasses.dataclass(frozen=True)
+class LMSource:
+    """GradSource over a registered LM architecture's per-row CE loss.
+
+    ``overrides`` is a tuple of ``(field, value)`` pairs applied to the
+    (smoke) config via ``cfg.replace`` — a hashable shrink knob for
+    benchmarks (the frozen dataclass plus this tuple is what makes the
+    source itself a valid program-cache key component).
+    """
+
+    arch: str = "qwen1.5-0.5b"
+    smoke: bool = True
+    overrides: Tuple[Tuple[str, Any], ...] = ()
+
+    @property
+    def model(self) -> Model:
+        return _model_for(self.arch, self.smoke, self.overrides)
+
+    def _delegate(self) -> PerExampleSource:
+        return PerExampleSource(per_row_loss_fn(self.model))
+
+    # --- the GradSource protocol (delegating to the reference source over
+    # the per-row adapter: one shared eq.-(2)/stale/eval implementation).
+
+    def check(self, data, n_workers: int) -> None:
+        tokens, targets = data
+        if tokens.shape != targets.shape:
+            raise ValueError(
+                f"tokens {tokens.shape} and targets {targets.shape} disagree"
+            )
+        self._delegate().check(data, n_workers)
+
+    def build(self, data, n_workers: int) -> SourceFns:
+        return self._delegate().build(data, n_workers)
+
+    def build_stale(self, data, n_workers: int):
+        return self._delegate().build_stale(data, n_workers)
+
+    def cache_token(self) -> Hashable:
+        return ("lm", self.arch, self.smoke, self.overrides)
+
+    # --- conveniences for benchmarks / tests.
+
+    def init_params(self, key: jax.Array):
+        return self.model.init(key)
+
+    def make_data(self, n_rows: int, seq_len: int, seed: int = 0):
+        """One deterministic synthetic token batch, worker-major shardable:
+        ``(tokens, targets)`` with shape (n_rows, seq_len)."""
+        stream = TokenStream(
+            vocab_size=self.model.cfg.vocab_size,
+            seq_len=seq_len,
+            global_batch=n_rows,
+            seed=seed,
+        )
+        return stream.batch_at(0)

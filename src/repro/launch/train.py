@@ -4,6 +4,12 @@ Runs the same train_step program the dry-run lowers, on whatever devices are
 available (a CPU host mesh for the runnable examples; the production mesh on
 a real pod).  Logs loss / k / simulated wall-clock, checkpoints periodically.
 
+The LM loop and the simulation engines share ONE step implementation: the
+train step is traced from ``repro.core.execmode.make_mode_steps`` (the same
+per-mode builders ``run_monte_carlo``/``run_sweep`` trace), so ``--mode
+kasync``/``--mode kbatch`` run the async execution modes around the real LM
+loss with no duplicated fastest-k/staleness logic.
+
     PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b --smoke \
         --steps 200 --batch 16 --seq 128 --controller pflug
 
@@ -217,6 +223,10 @@ def main(argv=None):
                     help="schedule: per-sample gradient variance estimate")
     ap.add_argument("--schedule-f0-gap", type=float, default=10.0,
                     help="schedule: F(w0) - F* estimate")
+    ap.add_argument("--mode", default="sync",
+                    choices=["sync", "kasync", "kbatch"],
+                    help="LM training execution mode (same per-mode step "
+                         "builders the sim engines trace)")
     ap.add_argument("--straggler", default="exponential",
                     choices=["exponential", "shifted_exponential", "pareto",
                              "bimodal", "deterministic"])
@@ -306,7 +316,7 @@ def main(argv=None):
     comm = CommModel(alpha=args.comm_alpha, beta=args.comm_beta)
 
     train_step = steps_lib.make_train_step(model, opt, controller, straggler,
-                                           n_workers, comm)
+                                           n_workers, comm, mode=args.mode)
     data = TokenStream(vocab_size=cfg.vocab_size, seq_len=args.seq,
                        global_batch=args.batch, seed=args.seed)
 

@@ -10,6 +10,7 @@ from repro.core.controller import (
     FixedKController,
     PflugController,
     ScheduleController,
+    SketchedPflugController,
     VarianceRatioController,
     get_controller,
 )
@@ -119,6 +120,82 @@ def test_get_controller_registry():
     assert isinstance(get_controller("pflug", 8), PflugController)
     with pytest.raises(ValueError):
         get_controller("nope", 8)
+
+
+# ---------------- pytree-safe inner products (bitwise-pinned for flat params)
+
+
+class TestInnerProductPytreeSafety:
+    """The Pflug-family inner products must accept arbitrary gradient pytrees
+    (real LM params) while staying BITWISE what they always were for the flat
+    quadratic params the goldens pin."""
+
+    def test_tree_dot_flat_is_bitwise_vdot(self):
+        from repro.core.controller import _tree_dot
+
+        k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+        a = jax.random.normal(k1, (37,))
+        b = jax.random.normal(k2, (37,))
+        assert np.array_equal(np.asarray(_tree_dot(a, b)),
+                              np.asarray(jnp.vdot(a, b)))
+
+    def test_tree_dot_pytree_is_leafwise_sum(self):
+        from repro.core.controller import _tree_dot
+
+        tree_a = {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                  "b": jnp.asarray([0.5, -2.0])}
+        tree_b = jax.tree.map(lambda x: x + 1.0, tree_a)
+        leaves_a, _ = jax.tree.flatten(tree_a)
+        leaves_b, _ = jax.tree.flatten(tree_b)
+        want = leaves_a[0] @ leaves_b[0]  # reduce order: tree.reduce(add)
+        want = want + jnp.vdot(leaves_a[1], leaves_b[1])
+        assert np.array_equal(np.asarray(_tree_dot(tree_a, tree_b)),
+                              np.asarray(want))
+
+    def test_pflug_flat_vs_split_pytree_same_decisions(self):
+        """Same gradient numbers, flat vs split across two leaves: the sign
+        events (and hence the whole k trajectory) must agree."""
+        c = PflugController(n_workers=8, k0=1, step=1, thresh=2, burnin=0)
+        flat0 = jnp.zeros((4,))
+        tree0 = {"a": jnp.zeros((2,)), "b": jnp.zeros((2,))}
+        sf, st = c.init(flat0), c.init(tree0)
+        key = jax.random.PRNGKey(11)
+        for i in range(12):
+            key, sub = jax.random.split(key)
+            g = jax.random.normal(sub, (4,)) * (-1.0) ** i
+            sf, kf = c.update(sf, g, jnp.asarray(0.0))
+            st, kt = c.update(st, {"a": g[:2], "b": g[2:]}, jnp.asarray(0.0))
+            assert int(kf) == int(kt)
+            assert int(sf.count_negative) == int(st.count_negative)
+
+    def test_sketch_flat_bitwise_pinned(self):
+        """The count-sketch of a FLAT gradient is pinned to its historical
+        arithmetic: per-leaf Rademacher signs seeded from the crc32 keypath
+        digest, positional bucketing into sketch_dim bins."""
+        import zlib
+
+        c = SketchedPflugController(n_workers=8, k0=1, sketch_dim=8, seed=17)
+        g = jax.random.normal(jax.random.PRNGKey(5), (21,))
+
+        m = c.sketch_dim
+        digest = zlib.crc32(b"")  # a bare array has the empty key path
+        signs = jax.random.rademacher(
+            jax.random.PRNGKey(c.seed + digest % (2 ** 30)), g.shape,
+            dtype=jnp.float32)
+        t = signs * g
+        t = jnp.pad(t, (0, (-t.size) % m))
+        want = t.reshape(-1, m).sum(axis=0)
+        assert np.array_equal(np.asarray(c._sketch(g)), np.asarray(want))
+
+    def test_sketched_pflug_pytree_grads_run_and_adapt(self):
+        c = SketchedPflugController(n_workers=8, k0=1, step=1, thresh=2,
+                                    burnin=0, sketch_dim=16)
+        state = c.init(_g(0.0))
+        for i in range(10):
+            state, k = c.update(state, _g(1.0 if i % 2 == 0 else -1.0),
+                                jnp.asarray(0.0))
+        assert int(k) > 1  # alternating signs -> sketch dots flip -> switches
+        assert state.prev_sketch.shape == (16,)
 
 
 # ---------------- theory ----------------

@@ -2,9 +2,8 @@
 against the event-driven host-loop reference, the bitwise sweep-vs-looped
 pins in every mode, the sync-mode bitwise invariant through the new carry,
 retrace behavior of mixed grids, WorkerFleet misuse errors, and the
-``chunk`` deprecation."""
+``chunk`` argument's removal."""
 
-import warnings
 from typing import NamedTuple
 
 import jax
@@ -414,24 +413,17 @@ def test_hetero_fleet_async_inactive_slots_never_dispatched(linreg, mode):
     assert float(l[:, -1].mean()) < float(l[:, 0].mean())
 
 
-# ------------------------------------------------- chunk deprecation
+# ------------------------------------------------- chunk removal
 
 
-def test_simulate_fastest_k_chunk_deprecated_once(linreg):
+def test_simulate_fastest_k_chunk_removed(linreg):
     data, eta = linreg
     common = dict(n_workers=N, controller=FixedKController(n_workers=N, k=2),
                   straggler=Exponential(rate=1.0), eta=eta,
                   key=jax.random.PRNGKey(0), num_iters=10, eval_every=5)
-    with pytest.warns(DeprecationWarning, match="chunk"):
+    with pytest.raises(TypeError, match="chunk"):
         simulate_fastest_k(_loss, jnp.zeros((D,)), data.X, data.y,
                            chunk=50, **common)
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        simulate_fastest_k(_loss, jnp.zeros((D,)), data.X, data.y,
-                           chunk=50, **common)
-    assert not [w for w in caught if issubclass(w.category, DeprecationWarning)], (
-        "chunk deprecation must only warn once"
-    )
     # and the async modes ride through the wrapper
     h = simulate_fastest_k(_loss, jnp.zeros((D,)), data.X, data.y,
                            mode="kasync", **common)

@@ -1,0 +1,123 @@
+"""Bounded compiled-program caches (satellite of the GradSource refactor).
+
+Both engines keep their jitted executables in a module-level
+``_LRUProgramCache`` (montecarlo owns the class; sweep reuses it).  The
+contract pinned here:
+
+  * capacity is bounded: inserting past ``maxsize`` drops the least-recently
+    used program, so long-lived benchmark processes don't pin every compiled
+    executable forever;
+  * ``get`` refreshes recency, so the hot program survives a sweep of
+    one-shot configurations;
+  * eviction costs exactly ONE retrace on re-entry — and a cache hit costs
+    zero (the ``_N_TRACES`` counters increment inside the traced function
+    bodies, so they count actual traces, never executions).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import montecarlo as mc
+from repro.core import sweep as sw
+from repro.core.controller import FixedKController
+from repro.core.montecarlo import _LRUProgramCache, run_monte_carlo
+from repro.core.straggler import Exponential
+from repro.core.sweep import SweepCase, run_sweep
+from repro.data import make_linreg_data
+
+N, M, D = 2, 8, 2
+
+
+def _loss(w, X, y):
+    return (X @ w - y) ** 2
+
+
+def _data():
+    return make_linreg_data(jax.random.PRNGKey(0), m=M, d=D)
+
+
+# ------------------------------------------------- the LRU class itself
+
+
+def test_lru_evicts_least_recently_used():
+    cache = _LRUProgramCache(maxsize=2)
+    cache["a"] = 1
+    cache["b"] = 2
+    assert cache.get("a") == 1  # refreshes 'a': now 'b' is LRU
+    cache["c"] = 3
+    assert len(cache) == 2
+    assert cache.get("b") is None  # 'b' evicted, not 'a'
+    assert cache.get("a") == 1 and cache.get("c") == 3
+    cache.clear()
+    assert len(cache) == 0 and cache.get("a") is None
+
+
+def test_lru_overwrite_does_not_grow():
+    cache = _LRUProgramCache(maxsize=2)
+    cache["a"] = 1
+    cache["a"] = 10
+    cache["b"] = 2
+    assert len(cache) == 2
+    assert cache.get("a") == 10
+
+
+# ------------------------------------------------- monte-carlo engine
+
+
+def test_montecarlo_eviction_retraces_exactly_once(monkeypatch):
+    data = _data()
+    keys = jax.random.split(jax.random.PRNGKey(1), 1)
+    mc.clear_program_cache()
+    monkeypatch.setattr(mc._PROGRAM_CACHE, "maxsize", 2)
+
+    def run(num_iters):
+        return run_monte_carlo(
+            _loss, jnp.zeros((D,)), data.X, data.y, n_workers=N,
+            controller=FixedKController(n_workers=N, k=1),
+            straggler=Exponential(rate=1.0), eta=0.01,
+            num_iters=num_iters, keys=keys, eval_every=5,
+        )
+
+    run(4), run(5), run(6)  # three distinct keys through a 2-slot cache
+    stats = mc.program_cache_stats()
+    assert stats["traces"] == 3
+    assert stats["programs"] == 2  # num_iters=4 evicted
+
+    run(4)  # evicted config re-enters: exactly one retrace
+    assert mc.program_cache_stats()["traces"] == 4
+    run(4)  # now cached: zero retraces
+    assert mc.program_cache_stats()["traces"] == 4
+    run(6)  # still resident (refreshed by the re-entry's eviction of 5)
+    assert mc.program_cache_stats()["traces"] == 4
+
+    mc.clear_program_cache()
+
+
+# ------------------------------------------------- sweep engine
+
+
+def test_sweep_eviction_retraces_exactly_once(monkeypatch):
+    data = _data()
+    cases = [SweepCase(FixedKController(n_workers=N, k=1),
+                       Exponential(rate=1.0), eta=0.01)]
+    sw.clear_sweep_cache()
+    monkeypatch.setattr(sw._PROGRAM_CACHE, "maxsize", 2)
+
+    def run(num_iters):
+        return run_sweep(
+            _loss, jnp.zeros((D,)), data.X, data.y, n_workers=N,
+            cases=cases, num_iters=num_iters,
+            key=jax.random.PRNGKey(2), n_replicas=1, eval_every=5,
+        )
+
+    run(4), run(5), run(6)
+    stats = sw.sweep_cache_stats()
+    assert stats["traces"] == 3
+    assert stats["programs"] == 2
+
+    run(4)  # evicted grid re-enters: exactly one retrace
+    assert sw.sweep_cache_stats()["traces"] == 4
+    run(4)
+    assert sw.sweep_cache_stats()["traces"] == 4
+
+    sw.clear_sweep_cache()
