@@ -24,10 +24,15 @@ Three rules:
   jitted renewal engine regressing to host-loop-like throughput means its
   scan hot path broke.
 
-The record may also carry an OPTIONAL ``lm`` section (fig_lm merges one in:
-``{cells, replicas, iters, smoke, dispatch_s, final_ce}``).  Absent it is
-ignored; present it is schema-checked — positive dispatch time, finite
-positive final CE — so a broken LM-grid run fails loudly.
+The record may also carry OPTIONAL gated sections merged in by the figure
+scripts: ``lm`` (fig_lm: ``{cells, replicas, iters, smoke, dispatch_s,
+final_ce}``) and ``byzantine`` (fig_byzantine: ``{cells, replicas, iters,
+smoke, dispatch_s, final_excess_gm_b30, mean_diverged_b30,
+gm_recovered_b30}``).  Absent they are ignored; present they are
+schema-checked — positive dispatch time, finite positive headline loss —
+so a broken figure run fails loudly.  A section that is present but EMPTY
+(``{}``) is a schema error, not an absence: an empty dict is what a failed
+merge leaves behind, and it must not pass as "section not run".
 
 File hygiene: the **repo-root** ``BENCH_sweep.json`` is the committed
 full-grid baseline; ``results/BENCH_sweep.json`` is scratch output of the
@@ -94,25 +99,73 @@ def baseline_record_error(baseline: dict) -> str | None:
     return None
 
 
+def _gated_section(rec: dict, name: str, required: dict):
+    """Fetch an OPTIONAL gated section.  Returns ``(section, error)``:
+    ``(None, None)`` when genuinely absent, ``(None, msg)`` on schema
+    violation, ``(section, None)`` when present and well-typed.
+
+    Present-but-empty (``{}``) is a hard error, NOT an absence: the merge
+    pattern is read-modify-write on the shared BENCH_sweep.json, and an
+    empty dict is the footprint of a figure run that crashed after
+    claiming its key — letting it pass would report 'section not run'
+    for a run that failed."""
+    sec = rec.get(name)
+    if sec is None:
+        return None, None
+    if not isinstance(sec, dict):
+        return None, (f"{name} section must be an object, got "
+                      f"{type(sec).__name__}")
+    if not sec:
+        return None, (f"{name} section is present but empty ({{}}): a "
+                      "failed figure merge must not pass as an absent "
+                      "section — rerun the figure or drop the key")
+    for key, typ in required.items():
+        if key not in sec:
+            return None, f"{name} section missing key {key!r} (has {sorted(sec)})"
+        bool_ok = typ is bool
+        if not isinstance(sec[key], typ) or (not bool_ok
+                                             and isinstance(sec[key], bool)):
+            return None, (f"{name} section key {key!r} has wrong type "
+                          f"{type(sec[key]).__name__}")
+    return sec, None
+
+
 def lm_section_error(rec: dict) -> str | None:
     """Schema-check the OPTIONAL ``lm`` section (fig_lm merges it into the
     record).  Absent is fine — the quadratic-grid rules above don't need it;
-    present-but-malformed is a hard error so a broken fig_lm merge can't
-    masquerade as 'ran clean'."""
-    lm = rec.get("lm")
-    if lm is None:
-        return None
-    required = {"cells": int, "replicas": int, "iters": int,
-                "dispatch_s": (int, float), "final_ce": (int, float)}
-    for key, typ in required.items():
-        if key not in lm:
-            return f"lm section missing key {key!r} (has {sorted(lm)})"
-        if not isinstance(lm[key], typ) or isinstance(lm[key], bool):
-            return f"lm section key {key!r} has wrong type {type(lm[key]).__name__}"
+    present-but-malformed (or empty) is a hard error so a broken fig_lm
+    merge can't masquerade as 'ran clean'."""
+    lm, err = _gated_section(rec, "lm", {
+        "cells": int, "replicas": int, "iters": int,
+        "dispatch_s": (int, float), "final_ce": (int, float)})
+    if err or lm is None:
+        return err
     if lm["dispatch_s"] <= 0:
         return f"lm dispatch_s must be positive, got {lm['dispatch_s']}"
     if not (0 < lm["final_ce"] == lm["final_ce"]):  # positive and not NaN
         return f"lm final_ce must be positive and finite, got {lm['final_ce']}"
+    return None
+
+
+def byzantine_section_error(rec: dict) -> str | None:
+    """Schema-check the OPTIONAL ``byzantine`` section (fig_byzantine
+    merges it in).  Same contract as ``lm``: absent = ignored,
+    present-but-malformed/empty = hard error.  The headline geomedian
+    excess must be finite and positive — that arm converges from the
+    start (honest-majority arrival set), so inf/NaN there means the
+    robust-aggregation path itself broke, not the attack succeeding."""
+    byz, err = _gated_section(rec, "byzantine", {
+        "cells": int, "replicas": int, "iters": int,
+        "dispatch_s": (int, float), "final_excess_gm_b30": (int, float),
+        "mean_diverged_b30": bool, "gm_recovered_b30": bool})
+    if err or byz is None:
+        return err
+    if byz["dispatch_s"] <= 0:
+        return f"byzantine dispatch_s must be positive, got {byz['dispatch_s']}"
+    exc = byz["final_excess_gm_b30"]
+    if not (0 < exc == exc and exc != float("inf")):
+        return ("byzantine final_excess_gm_b30 must be positive and finite, "
+                f"got {exc}")
     return None
 
 
@@ -166,17 +219,26 @@ def check(
     lm_err = lm_section_error(current)
     if lm_err:
         return lm_err
+    byz_err = byzantine_section_error(current)
+    if byz_err:
+        return byz_err
     lm = current.get("lm")
     lm_note = (
         f"; lm grid {lm['cells']}x{lm['replicas']} in {lm['dispatch_s']:.1f}s "
         f"(final_ce={lm['final_ce']:.3f})" if lm else ""
+    )
+    byz = current.get("byzantine")
+    byz_note = (
+        f"; byzantine grid {byz['cells']}x{byz['replicas']} in "
+        f"{byz['dispatch_s']:.1f}s (gm_b30={byz['final_excess_gm_b30']:.3g})"
+        if byz else ""
     )
     print(
         f"check_bench OK: warm {cur_warm:.3f}s vs baseline {base_warm:.3f}s "
         f"({ratio:.2f}x, {kind}, limit {max_ratio}x); warm sweep "
         f"{warm_speedup:.2f}x warm looped (floor {min_warm_speedup}x); "
         f"async engine {async_speedup:.0f}x host loop "
-        f"(floor {min_async_speedup}x){lm_note}"
+        f"(floor {min_async_speedup}x){lm_note}{byz_note}"
     )
     return None
 

@@ -15,6 +15,7 @@ from benchmarks import (  # noqa: E402
     fig2,
     fig3,
     fig_async,
+    fig_byzantine,
     fig_hetero,
     fig_lm,
     kernels_bench,
@@ -37,9 +38,13 @@ def main() -> None:
                                              bench_iters=None)]),
         ("ablation", lambda: [ablation.run("results/ablation.csv")]),
         ("sweep", lambda: [sweep_bench.run("results/BENCH_sweep.json")]),
-        # after sweep_bench so the 'lm' section merges into its fresh record
+        # after sweep_bench so the 'lm'/'byzantine' sections merge into its
+        # fresh record
         ("fig_lm", lambda: [fig_lm.run("results/fig_lm.csv",
                                        bench_json="results/BENCH_sweep.json")]),
+        ("fig_byzantine",
+         lambda: [fig_byzantine.run("results/fig_byzantine.csv",
+                                    bench_json="results/BENCH_sweep.json")]),
         ("kernels", kernels_bench.run),
         ("roofline", lambda: [roofline_table.run()]),
     ]

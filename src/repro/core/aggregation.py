@@ -46,6 +46,16 @@ __all__ = [
     "fastest_k_mask_time",
     "fastest_k_draw",
     "active_worker_mean_loss",
+    "AGG_KINDS",
+    "AGG_MEAN",
+    "AGG_TRIMMED",
+    "AGG_MEDIAN",
+    "AGG_GEOMEDIAN",
+    "WEISZFELD_ITERS",
+    "trimmed_mean_rows",
+    "coordinate_median_rows",
+    "geometric_median_rows",
+    "make_robust_select",
 ]
 
 
@@ -251,15 +261,186 @@ def active_worker_mean_loss(
     is active the result is **bitwise-equal** to ``jnp.mean(losses)`` — the
     pre-heterogeneity engines' eval — because ``jnp.where`` passes the
     selected operand through unchanged.
+
+    ``n_active == 0`` (an all-crashed fleet has no objective left) is
+    pinned to **+inf**, not the 0/0 NaN the naive division would produce:
+    the denominator is clamped to 1 — exact (an int max; for every
+    ``n_active >= 1`` the clamp is the identity, so positive-count cells
+    keep their bits) — and the zero-count lane is overridden by a select.
     """
     s = examples_per_worker
     full = jnp.mean(per_example_losses)
     shard_sums = per_example_losses.reshape(n_slots, s).sum(axis=1)
     active = (jnp.arange(n_slots) < n_active).astype(per_example_losses.dtype)
     masked = jnp.dot(shard_sums, active) / (
-        n_active.astype(per_example_losses.dtype) * s
+        jnp.maximum(n_active, 1).astype(per_example_losses.dtype) * s
     )
+    masked = jnp.where(n_active == 0, jnp.inf, masked)
     return jnp.where(n_active == n_slots, full, masked)
+
+
+# --------------------------------------------------------------------------
+# Robust aggregation (the Byzantine-fault axis, ROADMAP item 3).
+#
+# The eq.-(2) weighted mean is a single corrupted worker away from an
+# arbitrary update; the classic robust alternatives operate on the
+# per-worker gradient ROWS (each arriving worker's unweighted shard-mean
+# gradient) instead of their mask-weighted sum.  All three are in-graph,
+# fixed-shape, and take a traced participation mask + traced k, so they
+# drop into the engines as a per-cell ``agg`` leaf (see sweep.SweepCase):
+#
+# * ``trimmed``   — per-coordinate trimmed mean: drop the floor(beta*k)
+#   smallest and largest of the k arrived values, average the rest;
+# * ``median``    — per-coordinate median of the k arrived values;
+# * ``geomedian`` — geometric median via fixed-iteration Weiszfeld
+#   (Draco's checkpoint aggregator), smoothed with an eps-clamped
+#   denominator so coincident points are exact fixed points.
+#
+# ``make_robust_select`` wraps them as a per-cell select OVER the mean
+# path's gradient: a mean-aggregation cell's value rides the select
+# passthrough bit for bit, which is what lets mixed mean/robust grids share
+# one compiled program while mean-only grids prune to today's exact program
+# (sweep.GridSignature.agg_kinds).
+# --------------------------------------------------------------------------
+
+# Aggregator kinds — select indices baked into compiled sweep programs.
+# Append; never reorder.
+AGG_KINDS = {"mean": 0, "trimmed": 1, "median": 2, "geomedian": 3}
+AGG_MEAN, AGG_TRIMMED, AGG_MEDIAN, AGG_GEOMEDIAN = range(4)
+
+# Weiszfeld iteration count: static (baked into every robust program) so
+# the looped and sweep engines trace identical graphs.  8 iterations
+# reach ~1e-6 relative accuracy on the unit-scale gradient clouds the
+# tests pin (geometric-median convergence is linear away from degeneracy).
+WEISZFELD_ITERS = 8
+_WEISZFELD_EPS = 1e-12
+
+
+def _sorted_masked(mat: jax.Array, mask: jax.Array) -> jax.Array:
+    """Per-coordinate ascending sort with non-participants pushed to +inf.
+
+    ``mat`` is the (n_slots, D) row matrix, ``mask`` the {0,1} participation
+    vector with k ones: after the sort rows 0..k-1 of each column hold the
+    arrived values, rows k.. hold +inf.
+    """
+    vals = jnp.where(mask[:, None] > 0, mat, jnp.inf)
+    return jnp.sort(vals, axis=0)
+
+
+def trimmed_mean_rows(
+    mat: jax.Array, mask: jax.Array, k: jax.Array, trim_frac
+) -> jax.Array:
+    """Per-coordinate beta-trimmed mean over the masked rows.
+
+    Drops the ``t = floor(trim_frac * k)`` smallest and largest of the k
+    arrived values per coordinate (t clipped to ``(k-1)//2`` so at least
+    one value always survives) and averages the remaining ``k - 2t``.
+    ``trim_frac`` may be a traced leaf (sweep) or a Python float (looped
+    engine) — the multiply-then-floor is the same value either way.
+    """
+    n = mat.shape[0]
+    t = jnp.floor(trim_frac * k.astype(jnp.float32)).astype(jnp.int32)
+    t = jnp.minimum(t, (k - 1) // 2)
+    svals = _sorted_masked(mat, mask)
+    pos = jnp.arange(n, dtype=jnp.int32)[:, None]
+    keep = (pos >= t) & (pos <= k - 1 - t)
+    cnt = (k - 2 * t).astype(mat.dtype)
+    return jnp.sum(jnp.where(keep, svals, 0.0), axis=0) / cnt
+
+
+def coordinate_median_rows(
+    mat: jax.Array, mask: jax.Array, k: jax.Array
+) -> jax.Array:
+    """Per-coordinate median of the k masked rows (lower/upper averaged
+    for even k, the exact middle value for odd k)."""
+    svals = _sorted_masked(mat, mask)
+    lo = jnp.take(svals, (k - 1) // 2, axis=0)
+    hi = jnp.take(svals, k // 2, axis=0)
+    return 0.5 * (lo + hi)
+
+
+def geometric_median_rows(
+    mat: jax.Array, mask: jax.Array, k: jax.Array,
+    n_iter: int = WEISZFELD_ITERS,
+) -> jax.Array:
+    """Geometric median of the masked rows via fixed-iteration Weiszfeld.
+
+    Starts at the masked mean and iterates ``y <- sum_i w_i x_i / sum_i
+    w_i`` with ``w_i = mask_i / max(||x_i - y||, eps)`` a fixed ``n_iter``
+    times — in-graph, no convergence branch, so the trace is static.  The
+    eps clamp makes the all-rows-coincident case an exact fixed point
+    (every weight equals mask_i/eps, and the weighted mean of identical
+    points is that point up to one rounding) and protects the iterate from
+    a 0/0 when y lands exactly on a data point.
+    """
+    kf = k.astype(mat.dtype)
+    y = jnp.tensordot(mask, mat, axes=1) / kf
+    for _ in range(n_iter):
+        d = jnp.sqrt(jnp.sum((mat - y[None, :]) ** 2, axis=1))
+        w = mask / jnp.maximum(d, _WEISZFELD_EPS)
+        y = jnp.tensordot(w, mat, axes=1) / jnp.sum(w)
+    return y
+
+
+def _flatten_rows(rows):
+    """Pytree of (n_slots, ...) row leaves -> ((n_slots, D) f32 matrix,
+    unflatten(vec) -> params-shaped pytree).  D is static."""
+    leaves, treedef = jax.tree_util.tree_flatten(rows)
+    n = leaves[0].shape[0]
+    mat = jnp.concatenate(
+        [l.reshape(n, -1).astype(jnp.float32) for l in leaves], axis=1
+    )
+
+    def unflatten(vec):
+        out, off = [], 0
+        for l in leaves:
+            sz = 1
+            for s in l.shape[1:]:
+                sz *= s
+            out.append(vec[off:off + sz].reshape(l.shape[1:]).astype(l.dtype))
+            off += sz
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return mat, unflatten
+
+
+def make_robust_select(agg_kind, agg_param, present: tuple):
+    """Per-cell aggregator select: ``select(mean_g, rows, mask, k) -> g``.
+
+    ``present`` is the STATIC set of aggregator kinds the program must
+    trace (the grid signature's ``agg_kinds``); only the robust members are
+    computed.  ``agg_kind``/``agg_param`` are per-cell leaves — traced in
+    the sweep, baked constants in the looped engine (the select then folds,
+    leaving the chosen aggregator's bits).  Returns ``None`` when no robust
+    kind is present: the engines skip row materialization entirely and the
+    mean path is today's exact program.
+
+    Mean-aggregation cells inside a robust program take ``mean_g`` through
+    the ``where`` chain unchanged — the select-passthrough bitwise rule.
+    """
+    robust = tuple(sorted(set(present) - {AGG_MEAN}))
+    if not robust:
+        return None
+
+    def select(mean_g, rows, mask, k):
+        mat, unflatten = _flatten_rows(rows)
+        g = mean_g
+        for kind in robust:
+            if kind == AGG_TRIMMED:
+                val = trimmed_mean_rows(mat, mask, k, agg_param)
+            elif kind == AGG_MEDIAN:
+                val = coordinate_median_rows(mat, mask, k)
+            elif kind == AGG_GEOMEDIAN:
+                val = geometric_median_rows(mat, mask, k)
+            else:
+                raise ValueError(f"unknown aggregator kind {kind}")
+            vg = unflatten(val)
+            g = jax.tree.map(
+                lambda a, b: jnp.where(agg_kind == kind, b, a), g, vg
+            )
+        return g
+
+    return select
 
 
 def fastest_k_iteration(

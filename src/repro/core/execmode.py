@@ -232,6 +232,8 @@ def make_mode_prelude_and_tails(
     ctrl_update: Callable,  # ctrl_update(state, g, sim_time, stats) -> (state, k)
     ctrl_k: Callable = lambda s: s.k,  # current K from the controller state
     apply_update: Callable | None = None,  # (params, g, opt_state) -> (params, opt_state)
+    faults=None,  # Optional[repro.core.faults.FaultFns]
+    robust_agg: Callable | None = None,  # aggregation.make_robust_select result
 ):
     """The execution modes factored as (shared prelude, per-mode tails).
 
@@ -259,6 +261,36 @@ def make_mode_prelude_and_tails(
     omitting it is a bitwise no-op.  The launch train step plugs a real
     optimizer in here, which is what lets training and simulation share
     these step functions.
+
+    ``faults`` (a ``repro.core.faults.FaultFns``) and ``robust_agg`` (an
+    ``aggregation.make_robust_select`` result) thread the robustness axes
+    through every mode.  Both default to ``None``, in which case NONE of the
+    machinery below is traced — the fault-free / mean-aggregation program is
+    op-for-op today's program (the bitwise pin in tests/test_faults.py).
+    Inside a faulty program, healthy cells ride multiplies by exactly 1.0
+    and ``where`` passthroughs, which are bitwise no-ops:
+
+    * crash: ``faults.time`` pins crashed-past-onset response times and
+      residual clocks to +inf AFTER sampling/renewal, so the ranking path
+      degrades to the surviving fleet and an in-flight dispatch of a crashed
+      worker never completes.  Once fewer than k workers survive the k-th
+      order statistic saturates, iteration time goes +inf, and (the pinned
+      all-crashed edge case) parameters hold via an ``alive`` select.  The
+      ``isfinite`` guards below exist only to keep inf-minus-inf NaNs out of
+      the carried clocks; for finite clocks they are bitwise passthroughs.
+    * gradient faults fold into the eq.-(2) participation mask (the
+      weighted loss is linear in it): sign_flip -> -1, rescale -> param,
+      random_gauss -> 0 with its replacement noise added separately —
+      key-derived by ``fold_in`` from the event subkey so the engines' split
+      chain is never advanced.  The noise add is gated per cell on
+      ``faults.any_gauss`` (adding literal 0.0 could flip -0.0 bits).
+    * ``robust_agg(mean_g, rows, mask, k)`` selects the cell's aggregator
+      over the per-worker shard-gradient ROW stack (sync: at the master's
+      params; kasync: at each worker's snapshot) with the same fault
+      transforms applied row-wise; mean cells take ``mean_g`` through the
+      select unchanged.  The kbatch tail ignores ``robust_agg`` — its
+      arrivals are sequential, there is no row stack to aggregate — and the
+      engines reject kbatch+robust cells up front.
     """
     if apply_update is None:
 
@@ -268,12 +300,65 @@ def make_mode_prelude_and_tails(
                 opt_state,
             )
 
+    has_crash = faults is not None and faults.time is not None
+    has_grad_fault = faults is not None and faults.weight is not None
+    has_gauss = faults is not None and faults.noise_rows is not None
+
+    if robust_agg is not None:
+        _slot_idx = jnp.arange(n_slots)
+
+        def grad_rows(wp):
+            # Row i = slot i's unweighted shard-mean gradient at its own
+            # parameters — the robust aggregators' input cloud.
+            return jax.vmap(lambda i: shard_grad_at(wp, i))(_slot_idx)
+
+    def corrupted_grad(mean_grad_fn, rows_wp, arrive_f, k, sub, t0):
+        """Mean-path gradient with fault transforms + per-cell robust select.
+
+        ``mean_grad_fn(mask, k)`` is the mode's eq.-(2) gradient closure;
+        ``rows_wp`` the (n_slots,)-stacked params the robust rows evaluate
+        at; ``t0`` the event-start sim time (fault onsets are judged at the
+        event's start, identically in every mode).
+        """
+        mask_g = arrive_f * faults.weight(t0) if has_grad_fault else arrive_f
+        g = mean_grad_fn(mask_g, k)
+        z = faults.noise_rows(sub, t0) if has_gauss else None
+        if has_gauss:
+            kf = k.astype(jnp.float32)
+            g = jax.tree.map(
+                lambda gl, zl: jnp.where(
+                    faults.any_gauss,
+                    gl + jnp.tensordot(arrive_f, zl, axes=1) / kf,
+                    gl,
+                ),
+                g,
+                z,
+            )
+        if robust_agg is not None:
+            rows = grad_rows(rows_wp)
+            if faults is not None and faults.row_faults is not None:
+                rows = faults.row_faults(rows, z, t0)
+            g = robust_agg(g, rows, arrive_f, k)
+        return g
+
+    def hold_if_dead(params, old_params, remaining):
+        """The zero-survivors pin: parameters hold once every clock is +inf
+        (iteration time is already +inf via the saturated order statistic)."""
+        if not has_crash:
+            return params
+        alive = jnp.any(jnp.isfinite(remaining))
+        return jax.tree.map(
+            lambda a, b: jnp.where(alive, a, b), params, old_params
+        )
+
     def prelude(carry: ExecCarry) -> ModePrelude:
         new_key, sub = jax.random.split(carry.key)
         k = ctrl_k(carry.ctrl_state)
         remaining = renewal_remaining(
             draw(sub, carry.sim_time), carry.pending, carry.remaining
         )
+        if has_crash:
+            remaining = faults.time(remaining, carry.sim_time)
         # The sync hot-path primitive, read over residual clocks: arrival
         # set = the K smallest clocks, event duration = the K-th one.  (For
         # sync cells the clocks ARE the fresh draw — pending is never set.)
@@ -289,8 +374,23 @@ def make_mode_prelude_and_tails(
         # statistic -> eq.-(2) gradient at the master's params.  The async
         # carry fields pass through untouched (bitwise identity).
         k = p.k
-        g = sync_grad(carry.params, p.arrive_f, k)
+        if faults is None and robust_agg is None:
+            g = sync_grad(carry.params, p.arrive_f, k)
+        else:
+            rows_wp = (
+                jax.tree.map(
+                    lambda q: jnp.broadcast_to(q[None], (n_slots,) + q.shape),
+                    carry.params,
+                )
+                if robust_agg is not None
+                else None
+            )
+            g = corrupted_grad(
+                lambda m, kk: sync_grad(carry.params, m, kk),
+                rows_wp, p.arrive_f, k, p.sub, carry.sim_time,
+            )
         params, opt_state = apply_update(carry.params, g, carry.opt_state)
+        params = hold_if_dead(params, carry.params, p.remaining)
         sim_time = carry.sim_time + p.t_iter
         ctrl_state, _ = ctrl_update(carry.ctrl_state, g, sim_time, zero_stats(k))
         return (
@@ -308,8 +408,15 @@ def make_mode_prelude_and_tails(
         new_key, k = p.new_key, p.k
         remaining, arrive_f, t_iter = p.remaining, p.arrive_f, p.t_iter
         arrive = arrive_f.astype(bool)
-        g = stale_grad(carry.worker_params, arrive_f, k)
+        if faults is None and robust_agg is None:
+            g = stale_grad(carry.worker_params, arrive_f, k)
+        else:
+            g = corrupted_grad(
+                lambda m, kk: stale_grad(carry.worker_params, m, kk),
+                carry.worker_params, arrive_f, k, p.sub, carry.sim_time,
+            )
         params, opt_state = apply_update(carry.params, g, carry.opt_state)
+        params = hold_if_dead(params, carry.params, remaining)
         sim_time = carry.sim_time + t_iter
         kf = k.astype(jnp.float32)
         stats = ExecStats(
@@ -331,12 +438,22 @@ def make_mode_prelude_and_tails(
         # tau); a task finishing inside that window arrives at the window's
         # end — clamp at zero so it surfaces immediately next event.  With
         # comm = 0 the clamp is a bitwise no-op (non-arrival clocks are
-        # >= tau by construction).
+        # >= tau by construction).  Crashed clocks stay +inf (the isfinite
+        # guard also keeps inf - inf out when t_iter itself saturates; for
+        # finite clocks it selects the historical expression bit for bit).
+        if has_crash:
+            rem_next = jnp.where(
+                jnp.isfinite(remaining),
+                jnp.maximum(remaining - t_iter, 0.0),
+                jnp.inf,
+            )
+        else:
+            rem_next = jnp.maximum(remaining - t_iter, 0.0)
         return (
             ExecCarry(
                 params=params,
                 worker_params=worker_params,
-                remaining=jnp.maximum(remaining - t_iter, 0.0),
+                remaining=rem_next,
                 staleness=staleness,
                 pending=~arrive,
                 ctrl_state=ctrl_state,
@@ -368,6 +485,15 @@ def make_mode_prelude_and_tails(
         remaining = renewal_remaining(
             draw(sub0, carry.sim_time), carry.pending, carry.remaining
         )
+        if has_crash:
+            remaining = faults.time(remaining, carry.sim_time)
+        # Fault transforms hoisted per event (onsets are judged at the
+        # event's start, like the other modes; a completer landing several
+        # gradients this event reuses its one noise row).
+        t0 = carry.sim_time
+        w_mult = faults.weight(t0) if has_grad_fault else None
+        z_rows = faults.noise_rows(p.sub, t0) if has_gauss else None
+        g_mask = faults.gauss_mask(t0) if has_gauss else None
         g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), carry.params)
         i32 = lambda v: jnp.asarray(v, jnp.int32)  # noqa: E731
 
@@ -377,6 +503,18 @@ def make_mode_prelude_and_tails(
             i_star = jnp.argmin(rem)  # ties -> lowest index, like the heapq
             tau_e = rem[i_star]
             g_e = shard_grad_at(wp, i_star)
+            if has_grad_fault:
+                # Per-arrival corruption: the completer's contribution is
+                # scaled (sign_flip/rescale; healthy slots scale by exactly
+                # 1.0) and a gauss completer's is REPLACED by its gated,
+                # param-scaled noise row (where passthrough otherwise).
+                m_i = w_mult[i_star]
+                g_e = jax.tree.map(lambda a: m_i * a, g_e)
+            if has_gauss:
+                gz_i = g_mask[i_star]
+                g_e = jax.tree.map(
+                    lambda a, zl: jnp.where(gz_i, zl[i_star], a), g_e, z_rows
+                )
             w = jnp.where(active, jnp.float32(1.0), jnp.float32(0.0))
             gsum = jax.tree.map(lambda a, b: a + w * b, gsum, g_e)
             ssum = ssum + jnp.where(active, stal[i_star], 0)
@@ -388,7 +526,14 @@ def make_mode_prelude_and_tails(
             # per-event shard gradient above, O(s*d), dominates the O(n)
             # sampling in this loop anyway).
             redraw = draw(sub, carry.sim_time + tau_sum + tau_e)
-            rem_next = jnp.where(active, rem - tau_e, rem)
+            if has_crash:
+                # A crashed worker's redispatch never completes either, and
+                # inf-clock slots tick by inf-minus-inf otherwise.
+                redraw = faults.time(redraw, carry.sim_time + tau_sum + tau_e)
+                rem_minus = jnp.where(jnp.isfinite(rem), rem - tau_e, jnp.inf)
+            else:
+                rem_minus = rem - tau_e
+            rem_next = jnp.where(active, rem_minus, rem)
             rem_next = rem_next.at[i_star].set(
                 jnp.where(active, redraw[i_star], rem[i_star])
             )
@@ -416,6 +561,7 @@ def make_mode_prelude_and_tails(
         )
         g = jax.tree.map(lambda x: x / kf, gsum)
         params, opt_state = apply_update(carry.params, g, carry.opt_state)
+        params = hold_if_dead(params, carry.params, remaining)
         t_iter = tau_sum if comm_time is None else tau_sum + comm_time(k)
         sim_time = carry.sim_time + t_iter
         stats = ExecStats(
@@ -461,6 +607,8 @@ def make_mode_steps(
     ctrl_update: Callable,
     ctrl_k: Callable = lambda s: s.k,
     apply_update: Callable | None = None,
+    faults=None,
+    robust_agg: Callable | None = None,
 ):
     """The three full execution-mode step functions over a shared ``ExecCarry``.
 
@@ -475,6 +623,7 @@ def make_mode_steps(
         n_slots=n_slots, draw=draw, sync_grad=sync_grad, stale_grad=stale_grad,
         shard_grad_at=shard_grad_at, comm_time=comm_time, eta=eta,
         ctrl_update=ctrl_update, ctrl_k=ctrl_k, apply_update=apply_update,
+        faults=faults, robust_agg=robust_agg,
     )
     return tuple(
         (lambda carry, _tail=tail: _tail(carry, prelude(carry))) for tail in tails

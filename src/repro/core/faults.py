@@ -1,0 +1,345 @@
+"""Per-worker fault injection: Byzantine gradients and mid-run crashes.
+
+ROADMAP item 3: a production fleet's stragglers are often indistinguishable
+from *faulty* workers — crashed, or returning corrupted gradients (Draco's
+``err_mode`` threat model).  This module adds a fault axis to both engines
+(``run_monte_carlo_source`` and ``run_sweep_source``) as a transform on
+**sampled response times and gradients** — never on the sampler itself, so
+the full-family-sampler bitwise rule (``straggler.sample_times_per_worker``)
+is untouched.
+
+Each worker slot carries a packed fault row ``(family, onset_time, param)``:
+
+* ``none``         — healthy worker (the all-slots default);
+* ``sign_flip``    — once ``sim_time >= onset`` the worker's gradient
+  contribution is multiplied by -1 (the classic Byzantine reverse attack);
+* ``rescale``      — contribution multiplied by ``param`` (blow-up or
+  vanishing gradients);
+* ``random_gauss`` — contribution replaced by ``param * N(0, I)`` noise,
+  key-derived (``fold_in``) from the replica key so it is reproducible
+  under vmap and never perturbs the engines' existing split chain;
+* ``crash``        — the worker's response time flips to +inf once
+  ``sim_time >= onset`` (``onset_mask`` beside ``RateSchedule`` in
+  ``repro.core.straggler``), reusing the inactive-slot rank/mask path: the
+  master gracefully degrades to the surviving fleet, and in the async modes
+  a crashed worker's in-flight dispatch never completes (its residual clock
+  is pinned to +inf too).
+
+Every transform is built as a closure over the packed per-slot vectors
+(traced grid leaves in the sweep engine, baked constants in the looped
+engine) and gated on the *set of fault families present* — a fault-free
+program traces none of this (bitwise-pinned: tests/test_faults.py), and a
+healthy slot inside a faulty program multiplies by exactly 1.0 / rides
+``where`` selects whose passthrough is a bitwise no-op.
+
+Gradient faults compose with both aggregation paths: for the eq.-(2)
+weighted mean they fold into the participation mask (the weighted loss is
+linear in it), with ``random_gauss`` slots zeroed out of the mask and their
+noise added separately; for the robust-aggregation path
+(``aggregation.make_robust_select``) they transform the per-worker gradient
+rows directly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.straggler import onset_mask
+
+__all__ = [
+    "FAULT_FAMILIES",
+    "FAULT_NONE",
+    "FAULT_SIGN_FLIP",
+    "FAULT_RESCALE",
+    "FAULT_GAUSS",
+    "FAULT_CRASH",
+    "GRAD_FAULTS",
+    "FaultModel",
+    "FaultPlan",
+    "FaultFns",
+    "byzantine_plan",
+    "pack_faults",
+    "plan_kinds_present",
+    "crash_times",
+    "fault_weights",
+    "gauss_rows",
+    "apply_row_faults",
+    "make_fault_fns",
+]
+
+# Family order is load-bearing (mirrors straggler.SWEEP_FAMILIES): packed
+# kind indices are traced grid leaves interpreted by compiled sweep
+# programs.  Append new families; never reorder.
+FAULT_FAMILIES = {
+    "none": 0,
+    "sign_flip": 1,
+    "rescale": 2,
+    "random_gauss": 3,
+    "crash": 4,
+}
+FAULT_NONE, FAULT_SIGN_FLIP, FAULT_RESCALE, FAULT_GAUSS, FAULT_CRASH = range(5)
+
+# The families that corrupt gradient *content* (crash corrupts time only).
+GRAD_FAULTS = (FAULT_SIGN_FLIP, FAULT_RESCALE, FAULT_GAUSS)
+
+# fold_in tags deriving the gauss-noise stream from the per-event subkey
+# WITHOUT advancing the engines' split chain (which would break the bitwise
+# sweep-vs-looped contract for every other cell in the program).
+_NOISE_TAG = 0x0FA17
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """One worker's fault: ``(family, onset, param)``.
+
+    ``onset`` is simulated wall-clock time (the fault activates at the
+    first master event whose *start* time satisfies ``sim_time >= onset``);
+    ``param`` is the rescale factor / gauss noise scale (ignored by
+    ``sign_flip`` and ``crash``).
+    """
+
+    family: str
+    onset: float = 0.0
+    param: float = 1.0
+
+    def __post_init__(self):
+        if self.family not in FAULT_FAMILIES:
+            raise ValueError(
+                f"unknown fault family {self.family!r}; options "
+                f"{sorted(FAULT_FAMILIES)}"
+            )
+
+    @property
+    def kind(self) -> int:
+        return FAULT_FAMILIES[self.family]
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Per-worker fault assignment (``None`` entries = healthy workers).
+
+    ``models[i]`` is active worker i's fault; plans shorter than the
+    active worker count leave the remaining workers healthy.  Inactive
+    (padded) slots are always healthy — they are already +inf.
+    """
+
+    models: Sequence[Optional[FaultModel]]
+
+    def __post_init__(self):
+        object.__setattr__(self, "models", tuple(self.models))
+        for m in self.models:
+            if m is not None and not isinstance(m, FaultModel):
+                raise ValueError(f"FaultPlan entries must be FaultModel or None, got {m!r}")
+
+    def kinds_present(self) -> tuple:
+        """Sorted non-``none`` family indices this plan can activate."""
+        return tuple(sorted({
+            m.kind for m in self.models if m is not None and m.kind != FAULT_NONE
+        }))
+
+
+def byzantine_plan(
+    n_active: int, frac: float, family: str, onset: float = 0.0,
+    param: float = 1.0,
+) -> Optional[FaultPlan]:
+    """A fleet with the LAST ``round(frac * n_active)`` workers faulty.
+
+    Faulting the tail (not the head) keeps worker 0 honest at every
+    fraction, so nested fractions are nested worker sets.  Returns ``None``
+    for a fraction that rounds to zero faulty workers — the fault-free arm
+    of a Byzantine sweep prunes to the fault-free program.
+    """
+    if not 0.0 <= frac <= 1.0:
+        raise ValueError(f"fault fraction must be in [0, 1], got {frac}")
+    n_bad = int(round(frac * n_active))
+    if n_bad == 0 or family == "none":
+        return None
+    fm = FaultModel(family=family, onset=onset, param=param)
+    return FaultPlan(models=(None,) * (n_active - n_bad) + (fm,) * n_bad)
+
+
+def pack_faults(
+    plan: Optional[FaultPlan], n_slots: int, n_active: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pack a plan into per-slot vectors ``(kinds, onset, param)``.
+
+    ``kinds`` int32 ``(n_slots,)``, ``onset``/``param`` float32
+    ``(n_slots,)``.  A ``None`` plan packs to all-``none`` rows (the
+    transforms then multiply by exactly 1.0 / select nothing — bitwise
+    no-ops inside a faulty program, untraced outside one).
+    """
+    kinds = np.zeros((n_slots,), np.int32)
+    onset = np.zeros((n_slots,), np.float32)
+    param = np.ones((n_slots,), np.float32)
+    if plan is None:
+        return kinds, onset, param
+    if len(plan.models) > n_active:
+        raise ValueError(
+            f"fault plan has {len(plan.models)} entries but only "
+            f"{n_active} active workers"
+        )
+    for i, m in enumerate(plan.models):
+        if m is None:
+            continue
+        kinds[i] = m.kind
+        onset[i] = m.onset
+        param[i] = m.param
+    return kinds, onset, param
+
+
+def plan_kinds_present(plan: Optional[FaultPlan]) -> tuple:
+    """Signature component: the fault families a cell's plan can activate."""
+    return () if plan is None else plan.kinds_present()
+
+
+# ------------------------------------------------------- in-graph transforms
+
+
+def crash_times(times, kinds, onset, t):
+    """Response times with crashed-past-onset slots pinned to +inf.
+
+    Applied AFTER the sampler (and after ``renewal_remaining`` in the async
+    modes, so an in-flight dispatch of a crashed worker never completes):
+    the +inf slots then rank strictly after every live worker — exactly the
+    inactive-slot path — and the k-th order statistic saturates to +inf
+    only once fewer than k workers survive.
+    """
+    crashed = (kinds == FAULT_CRASH) & onset_mask(onset, t)
+    return jnp.where(crashed, jnp.inf, times)
+
+
+def fault_weights(kinds, onset, param, t, present: tuple):
+    """Per-slot multiplier folding gradient faults into the eq.-(2) mask.
+
+    The weighted loss is linear in the participation mask, so multiplying
+    slot i's mask entry multiplies its gradient contribution: ``sign_flip``
+    -> -1, ``rescale`` -> param, ``random_gauss`` -> 0 (its replacement
+    noise is added separately by ``gauss_rows``).  Healthy / pre-onset
+    slots multiply by exactly 1.0 — a bitwise no-op.  Only the families in
+    ``present`` are traced.
+    """
+    active = onset_mask(onset, t)
+    w = jnp.ones(kinds.shape, jnp.float32)
+    if FAULT_SIGN_FLIP in present:
+        w = jnp.where((kinds == FAULT_SIGN_FLIP) & active, jnp.float32(-1.0), w)
+    if FAULT_RESCALE in present:
+        w = jnp.where((kinds == FAULT_RESCALE) & active, param, w)
+    if FAULT_GAUSS in present:
+        w = jnp.where((kinds == FAULT_GAUSS) & active, jnp.float32(0.0), w)
+    return w
+
+
+def gauss_rows(key, kinds, onset, param, t, params_like, n_slots: int):
+    """Per-worker replacement-noise rows: ``1[gauss & onset] * param * N(0, I)``.
+
+    One params-shaped pytree with a leading ``(n_slots,)`` axis.  The key is
+    derived by ``fold_in`` from the per-event subkey (plus a per-leaf index)
+    — it consumes nothing from the engines' split chain, so programs with
+    and without gauss tracing agree bitwise on every non-gauss cell.
+    """
+    kz = jax.random.fold_in(key, _NOISE_TAG)
+    gate = jnp.where(
+        (kinds == FAULT_GAUSS) & onset_mask(onset, t), param, jnp.float32(0.0)
+    )
+    leaves, treedef = jax.tree_util.tree_flatten(params_like)
+    out = []
+    for j, leaf in enumerate(leaves):
+        z = jax.random.normal(
+            jax.random.fold_in(kz, j), (n_slots,) + np.shape(leaf), jnp.float32
+        )
+        out.append(gate.reshape((n_slots,) + (1,) * np.ndim(leaf)) * z)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def apply_row_faults(rows, z, kinds, onset, param, t, present: tuple):
+    """Gradient faults on the per-worker ROW stack (robust-aggregation path).
+
+    ``sign_flip``/``rescale`` multiply the faulty rows; ``random_gauss``
+    rows are *replaced* by the (already gated and param-scaled) noise rows
+    ``z`` — the same draw the mean path adds, so both aggregation paths see
+    one consistent corrupted fleet.  Healthy rows multiply by exactly 1.0
+    and pass through every select bit for bit.
+    """
+    active = onset_mask(onset, t)
+    mult = jnp.ones(kinds.shape, jnp.float32)
+    if FAULT_SIGN_FLIP in present:
+        mult = jnp.where((kinds == FAULT_SIGN_FLIP) & active, jnp.float32(-1.0), mult)
+    if FAULT_RESCALE in present:
+        mult = jnp.where((kinds == FAULT_RESCALE) & active, param, mult)
+
+    def bcast(v, like):
+        return v.reshape(v.shape + (1,) * (like.ndim - 1))
+
+    out = jax.tree.map(lambda r: bcast(mult, r) * r, rows)
+    if FAULT_GAUSS in present:
+        gsel = (kinds == FAULT_GAUSS) & active
+        out = jax.tree.map(
+            lambda r, zl: jnp.where(bcast(gsel, r), zl, r), out, z
+        )
+    return out
+
+
+class FaultFns(NamedTuple):
+    """The fault closures an engine threads into the execution-mode tails.
+
+    Every field is ``None`` when its family set is absent — the tails then
+    trace nothing for it (the fault-free-program bitwise pin).
+
+    * ``time(times, t)`` — crash transform on sampled times / residual
+      clocks (+inf past onset);
+    * ``weight(t)`` — per-slot gradient multiplier for the eq.-(2) mask;
+    * ``noise_rows(key, t)`` — gauss replacement-noise rows (params-shaped
+      pytree, leading ``(n_slots,)`` axis, gated and param-scaled);
+    * ``gauss_mask(t)`` — per-slot bool: gauss fault active at t;
+    * ``any_gauss`` — per-cell predicate (traced in the sweep): does this
+      cell have ANY gauss slot — gates the mean path's noise add so
+      gauss-free cells pass their gradient through a select unchanged;
+    * ``row_faults(rows, z, t)`` — row-stack transform for robust
+      aggregation.
+    """
+
+    time: Optional[Callable]
+    weight: Optional[Callable]
+    noise_rows: Optional[Callable]
+    gauss_mask: Optional[Callable]
+    any_gauss: Any
+    row_faults: Optional[Callable]
+
+
+def make_fault_fns(
+    kinds, onset, param, present: tuple, params_like, n_slots: int
+) -> Optional[FaultFns]:
+    """Build the fault closures for one program.
+
+    ``kinds``/``onset``/``param`` are the packed per-slot vectors — traced
+    grid leaves (sweep) or baked constants (looped engine); the arithmetic
+    is identical either way (selects and multiplies, no divisions by
+    parameters).  ``present`` is the STATIC set of fault families the
+    program must trace (the grid signature's ``fault_kinds``); with none
+    present the engines skip fault code entirely (``None`` return).
+    """
+    if not present:
+        return None
+    has_grad = any(f in present for f in GRAD_FAULTS)
+    has_gauss = FAULT_GAUSS in present
+    has_crash = FAULT_CRASH in present
+    return FaultFns(
+        time=(lambda times, t: crash_times(times, kinds, onset, t)) if has_crash else None,
+        weight=(lambda t: fault_weights(kinds, onset, param, t, present))
+        if has_grad else None,
+        noise_rows=(
+            lambda key, t: gauss_rows(key, kinds, onset, param, t, params_like, n_slots)
+        ) if has_gauss else None,
+        gauss_mask=(
+            lambda t: (kinds == FAULT_GAUSS) & onset_mask(onset, t)
+        ) if has_gauss else None,
+        any_gauss=jnp.any(kinds == FAULT_GAUSS) if has_gauss else None,
+        row_faults=(
+            lambda rows, z, t: apply_row_faults(rows, z, kinds, onset, param, t, present)
+        ) if has_grad else None,
+    )

@@ -63,7 +63,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import aggregation, execmode
+from repro.core import aggregation, execmode, faults as faultsmod
 from repro.core.gradsource import GradSource, PerExampleSource
 from repro.core.straggler import (
     StragglerModel,
@@ -314,20 +314,37 @@ def _build_async_program(
     eval_every: int,
     unroll: int,
     mode: str,
+    fault: faultsmod.FaultPlan | None = None,
+    agg: str = "mean",
+    agg_param: float = 0.1,
 ):
-    """K-async / K-batch-async variant: the renewal-process carry
-    (``execmode.ExecCarry``) threaded through the same eval-block scaffolding
-    as the sync program.  The per-event step functions are the SAME code the
-    sweep engine traces (``execmode.make_mode_steps``), so an async sweep
-    cell is bitwise-equal to this program for identical PRNG keys."""
+    """Moded variant: the renewal-process carry (``execmode.ExecCarry``)
+    threaded through the same eval-block scaffolding as the sync program.
+    The per-event step functions are the SAME code the sweep engine traces
+    (``execmode.make_mode_steps``), so a sweep cell is bitwise-equal to this
+    program for identical PRNG keys.  This builder serves every async mode,
+    and — since the robustness axes live in the shared mode tails — every
+    faulty or robust-aggregation configuration too, including ``sync`` ones
+    (the moded sync tail is pinned bitwise-equal to the lean sync program,
+    so routing through here never changes a fault-free cell's bits)."""
     n_full, rem = divmod(num_iters, eval_every)
     mode_idx = execmode.MODES[mode]
 
     is_fleet = isinstance(straggler, WorkerFleet)
+    n_active = straggler.n_active if is_fleet else n_workers
     if is_fleet:
         pmat_np, kinds_np, _ = pack_params_per_worker(straggler, n_workers)
         n_knots = len(straggler.schedule.times) if straggler.schedule else 0
         sched_np = pack_schedule(straggler.schedule, max(1, n_knots))
+
+    # Packed per-slot fault rows, baked as program constants (the sweep
+    # engine carries the identical vectors as traced leaves; the transforms
+    # are selects and multiplies either way, so the arithmetic matches bit
+    # for bit).  ``fault_present``/``agg_present`` are the STATIC family
+    # sets this program traces — mirroring the sweep's GridSignature axes.
+    fault_present = faultsmod.plan_kinds_present(fault)
+    fk_np, fo_np, fp_np = faultsmod.pack_faults(fault, n_workers, n_active)
+    agg_present = tuple(sorted({aggregation.AGG_MEAN, aggregation.AGG_KINDS[agg]}))
 
     # Class controllers all take the ExecStats signal; tolerate user-supplied
     # policies that predate it (they see the historical 3-argument call).
@@ -378,6 +395,14 @@ def _build_async_program(
         def ctrl_k(state):
             return state.k if hasattr(state, "k") else state[0]
 
+        fault_fns = faultsmod.make_fault_fns(
+            jnp.asarray(fk_np), jnp.asarray(fo_np), jnp.asarray(fp_np),
+            fault_present, params0, n_workers,
+        )
+        robust_sel = aggregation.make_robust_select(
+            aggregation.AGG_KINDS[agg], float(agg_param), agg_present
+        )
+
         steps = execmode.make_mode_steps(
             n_slots=n_workers,
             draw=draw,
@@ -388,6 +413,8 @@ def _build_async_program(
             eta=eta,
             ctrl_update=ctrl_update,
             ctrl_k=ctrl_k,
+            faults=fault_fns,
+            robust_agg=robust_sel,
         )
         one_step = steps[mode_idx]
 
@@ -438,6 +465,9 @@ def run_monte_carlo_source(
     eval_every: int = 10,
     unroll: int = 8,
     mode: str = "sync",
+    fault: faultsmod.FaultPlan | None = None,
+    agg: str = "mean",
+    agg_param: float = 0.1,
 ) -> MonteCarloResult:
     """Run R fastest-k SGD replicas of an arbitrary ``GradSource``.
 
@@ -448,6 +478,14 @@ def run_monte_carlo_source(
     matches ``run_monte_carlo`` (whose docstring carries the details); that
     function is literally a wrapper over this one with the reference
     per-example source.
+
+    ``fault`` injects a per-worker ``faults.FaultPlan`` (Byzantine gradient
+    corruption and/or mid-run crashes) and ``agg``/``agg_param`` select the
+    gradient aggregator (``aggregation.AGG_KINDS``; the default eq.-(2)
+    weighted ``"mean"``, or robust ``"trimmed"``/``"median"``/
+    ``"geomedian"`` — rejected in ``kbatch`` mode, whose arrivals are
+    sequential).  This engine is the per-cell bitwise ground truth the sweep
+    engine's fault/robust cells are pinned against.
     """
     if keys is None:
         if key is None or n_replicas is None:
@@ -461,6 +499,20 @@ def run_monte_carlo_source(
     if mode not in execmode.MODES:
         raise ValueError(
             f"unknown mode {mode!r}; options {sorted(execmode.MODES)}"
+        )
+    if agg not in aggregation.AGG_KINDS:
+        raise ValueError(
+            f"unknown aggregator {agg!r}; options {sorted(aggregation.AGG_KINDS)}"
+        )
+    if agg != "mean" and mode == "kbatch":
+        raise ValueError(
+            f"robust aggregation ({agg!r}) is not supported in kbatch mode — "
+            "kbatch arrivals are sequential, there is no per-worker row "
+            "stack to aggregate"
+        )
+    if fault is not None and not isinstance(fault, faultsmod.FaultPlan):
+        raise ValueError(
+            f"fault must be a faults.FaultPlan or None, got {fault!r}"
         )
     if isinstance(straggler, WorkerFleet):
         # Mirror sweep._cell_of: a controller sized to more workers than the
@@ -484,18 +536,25 @@ def run_monte_carlo_source(
         int(eval_every),
         int(unroll),
         str(mode),
+        _hashable(fault),
+        str(agg),
+        float(agg_param),
     )
     program = _PROGRAM_CACHE.get(cache_key)
     if program is None:
-        if mode == "sync":
+        if mode == "sync" and fault is None and agg == "mean":
             program = _build_program(
                 source, n_workers, controller, straggler, comm,
                 eta, num_iters, eval_every, unroll,
             )
         else:
+            # Any fault or robust-aggregation configuration routes through
+            # the moded builder (even mode="sync"): the robustness
+            # transforms live in the shared execmode tails.
             program = _build_async_program(
                 source, n_workers, controller, straggler, comm,
                 eta, num_iters, eval_every, unroll, mode,
+                fault=fault, agg=agg, agg_param=agg_param,
             )
         _PROGRAM_CACHE[cache_key] = program
     if isinstance(straggler, WorkerFleet):
@@ -527,6 +586,9 @@ def run_monte_carlo(
     eval_every: int = 10,
     unroll: int = 8,
     mode: str = "sync",
+    fault: faultsmod.FaultPlan | None = None,
+    agg: str = "mean",
+    agg_param: float = 0.1,
 ) -> MonteCarloResult:
     """Run R independent fastest-k SGD replicas in one jitted program.
 
@@ -583,6 +645,9 @@ def run_monte_carlo(
         eval_every=eval_every,
         unroll=unroll,
         mode=mode,
+        fault=fault,
+        agg=agg,
+        agg_param=agg_param,
     )
 
 

@@ -44,6 +44,7 @@ __all__ = [
     "sample_times_per_worker",
     "schedule_multiplier",
     "apply_rate_schedule",
+    "onset_mask",
     "renewal_remaining",
 ]
 
@@ -612,6 +613,18 @@ def apply_rate_schedule(pmat, mode, leaf, times, scales, t) -> jax.Array:
     mult = schedule_multiplier(mode, times, scales, t)
     col = jnp.arange(pmat.shape[1]) == leaf
     return pmat * jnp.where(col, mult, jnp.float32(1.0))[None, :]
+
+
+def onset_mask(onset_times, t) -> jax.Array:
+    """Per-slot bool: has simulated time ``t`` reached each slot's onset?
+
+    The time-trigger primitive shared by ``RateSchedule`` evaluation and the
+    fault axis (``repro.core.faults``): a slot whose onset is +inf never
+    triggers, onset 0.0 triggers from the first event.  Both arguments may
+    be traced; the comparison is exact, so a triggered/untriggered slot's
+    downstream select is a clean bitwise passthrough.
+    """
+    return jnp.asarray(t, jnp.float32) >= onset_times
 
 
 def sample_times_per_worker(kinds, pmat, key) -> jax.Array:

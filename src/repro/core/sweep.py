@@ -75,7 +75,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import aggregation, execmode
+from repro.core import aggregation, execmode, faults
 from repro.core.controller import (
     FixedKController,
     PflugController,
@@ -140,7 +140,24 @@ class GridSignature(NamedTuple):
     * ``ctrl_kinds`` — controller branch indices present,
     * ``modes`` — ``execmode.MODES`` indices present,
     * ``with_schedule`` — any cell carries a live ``RateSchedule``,
-    * ``with_comm`` — any cell carries a non-zero ``CommModel``.
+    * ``with_comm`` — any cell carries a non-zero ``CommModel``,
+    * ``fault_kinds`` — non-``none`` fault families any cell's ``FaultPlan``
+      can activate (``faults.FAULT_FAMILIES`` indices),
+    * ``agg_kinds`` — aggregator kinds present (``aggregation.AGG_KINDS``
+      indices; ``(AGG_MEAN,)`` for an all-mean grid).
+
+    The fault and aggregator axes are specialized even under
+    ``specialize=False`` (``_full_signature`` derives them from the actual
+    cases): unconditionally tracing per-slot fault transforms, gauss noise
+    draws, and three robust aggregators would tax every unspecialized
+    dispatch — including the committed warm-ceiling benchmark gate — for
+    axes almost no grid populates.  A fault-free, mean-aggregation grid
+    therefore compiles today's exact program under BOTH dispatch modes (the
+    bitwise pin in tests/test_faults.py); same-shape *fault-grid*
+    repopulation still never retraces, because the packed per-slot fault
+    rows and the per-cell aggregator assignment are traced leaves — only
+    changing which *families/aggregators exist anywhere in the grid* can
+    compile a new program.
 
     The straggler *family* set is deliberately NOT part of the signature:
     under the shared-base-uniform protocol every family is a couple of
@@ -162,6 +179,22 @@ class GridSignature(NamedTuple):
     modes: tuple
     with_schedule: bool
     with_comm: bool
+    fault_kinds: tuple
+    agg_kinds: tuple
+
+
+def _robustness_axes(cases: Sequence["SweepCase"]) -> tuple[tuple, tuple]:
+    """The (fault_kinds, agg_kinds) signature components of a grid."""
+    fault_kinds, agg_kinds = set(), set()
+    for c in cases:
+        fault_kinds.update(faults.plan_kinds_present(c.fault))
+        ak = aggregation.AGG_KINDS.get(c.agg)
+        if ak is not None:  # unknown aggregators error later, in _cell_of
+            agg_kinds.add(ak)
+    return (
+        tuple(sorted(fault_kinds)),
+        tuple(sorted(agg_kinds)) if agg_kinds else (aggregation.AGG_MEAN,),
+    )
 
 
 def grid_signature(cases: Sequence["SweepCase"], n_slots: int) -> GridSignature:
@@ -181,11 +214,14 @@ def grid_signature(cases: Sequence["SweepCase"], n_slots: int) -> GridSignature:
                 with_schedule = True
         if c.comm is not None and (c.comm.alpha != 0.0 or c.comm.beta != 0.0):
             with_comm = True
+    fault_kinds, agg_kinds = _robustness_axes(cases)
     return GridSignature(
         ctrl_kinds=tuple(sorted(kinds)),
         modes=tuple(sorted(modes)),
         with_schedule=with_schedule,
         with_comm=with_comm,
+        fault_kinds=fault_kinds,
+        agg_kinds=agg_kinds,
     )
 
 
@@ -196,15 +232,21 @@ def _full_signature(cases: Sequence["SweepCase"]) -> GridSignature:
     repopulates without retracing.  The one static split retained is the
     historical all-sync flag: a grid with no async cell compiles the lean
     pre-mode program (no ExecCarry), any async cell selects the full
-    three-mode program.
+    three-mode program.  The fault/aggregator axes are derived from the
+    actual cases even here — they are always specialized (see
+    GridSignature) — so a faulty grid under ``specialize=False`` keeps
+    zero-retrace repopulation only within its fault/aggregator family sets.
     """
     all_sync = all(c.mode == "sync" for c in cases)
+    fault_kinds, agg_kinds = _robustness_axes(cases)
     return GridSignature(
         ctrl_kinds=tuple(range(_N_CTRL_KINDS)),
         modes=(execmode.MODE_SYNC,) if all_sync
         else tuple(sorted(execmode.MODES.values())),
         with_schedule=True,
         with_comm=True,
+        fault_kinds=fault_kinds,
+        agg_kinds=agg_kinds,
     )
 
 
@@ -232,8 +274,15 @@ def _auto_unroll(sig: GridSignature) -> int:
     Unroll never affects the arithmetic — trajectories are
     bitwise-identical across unroll values (pinned by
     tests/test_specialize.py).
+
+    Fault or robust-aggregation axes in the signature take the async
+    setting: the step body grows the per-slot fault transforms (and the
+    robust path an n_slots row stack of shard gradients), so the
+    compile-time reasoning is the big-body one.
     """
     if sig.modes != (execmode.MODE_SYNC,):
+        return 4
+    if sig.fault_kinds or sig.agg_kinds != (aggregation.AGG_MEAN,):
         return 4
     return 8 if len(sig.ctrl_kinds) == 1 else 6
 
@@ -254,6 +303,16 @@ class SweepCase:
     is K — the number of (stale) gradient arrivals per master update.  Mode
     is a traced grid leaf: sync and async arms run in ONE compiled program,
     and repopulating an equally-shaped mixed grid never retraces.
+
+    ``fault`` is the cell's ``faults.FaultPlan`` (``None`` = healthy fleet;
+    ``faults.byzantine_plan`` builds the standard fraction-faulty plan) —
+    packed into per-slot ``(family, onset, param)`` leaf vectors.  ``agg``
+    names the cell's gradient aggregator (``aggregation.AGG_KINDS``): the
+    eq.-(2) weighted ``"mean"`` (default) or the robust ``"trimmed"`` /
+    ``"median"`` / ``"geomedian"`` alternatives over the per-worker row
+    stack, with ``agg_param`` the trimmed mean's trim fraction (ignored by
+    the others).  Robust aggregation is rejected for ``kbatch`` cells —
+    kbatch arrivals are sequential, there is no row stack to aggregate.
     """
 
     controller: Any
@@ -262,6 +321,9 @@ class SweepCase:
     comm: aggregation.CommModel | None = None
     label: str = ""
     mode: str = "sync"
+    fault: faults.FaultPlan | None = None
+    agg: str = "mean"
+    agg_param: float = 0.1
 
     def name(self) -> str:
         if self.label:
@@ -306,6 +368,11 @@ class _CellParams(NamedTuple):
     comm_alpha: jax.Array  # f32
     comm_beta: jax.Array  # f32
     eta: jax.Array  # f32
+    fault_kinds: jax.Array  # int32 (n_slots,) — faults.FAULT_FAMILIES per slot
+    fault_onset: jax.Array  # f32 (n_slots,) — per-slot fault onset sim time
+    fault_param: jax.Array  # f32 (n_slots,) — rescale factor / gauss scale
+    agg_kind: jax.Array  # int32 — aggregation.AGG_KINDS select index
+    agg_param: jax.Array  # f32 — trimmed mean's trim fraction
 
 
 class _CtrlState(NamedTuple):
@@ -400,6 +467,26 @@ def _cell_of(
             f"cell {case.name()!r}: unknown mode {case.mode!r}; options "
             f"{sorted(execmode.MODES)}"
         )
+    if case.agg not in aggregation.AGG_KINDS:
+        raise ValueError(
+            f"cell {case.name()!r}: unknown aggregator {case.agg!r}; options "
+            f"{sorted(aggregation.AGG_KINDS)}"
+        )
+    if case.agg != "mean" and case.mode == "kbatch":
+        raise ValueError(
+            f"cell {case.name()!r}: robust aggregation ({case.agg!r}) is not "
+            "supported in kbatch mode — kbatch arrivals are sequential, "
+            "there is no per-worker row stack to aggregate"
+        )
+    if case.fault is not None and not isinstance(case.fault, faults.FaultPlan):
+        raise ValueError(
+            f"cell {case.name()!r}: fault must be a faults.FaultPlan or None, "
+            f"got {case.fault!r}"
+        )
+    try:
+        fkinds, fonset, fparam = faults.pack_faults(case.fault, n_slots, n_active)
+    except ValueError as e:
+        raise ValueError(f"cell {case.name()!r}: {e}") from None
     k0, step, thresh, burnin = 1, 0, 0, 0
     k_max = n_active
     decay = ratio_thresh = 0.0
@@ -457,6 +544,11 @@ def _cell_of(
         comm_alpha=f32(comm.alpha),
         comm_beta=f32(comm.beta),
         eta=f32(case.eta),
+        fault_kinds=fkinds,
+        fault_onset=fonset,
+        fault_param=fparam,
+        agg_kind=i32(aggregation.AGG_KINDS[case.agg]),
+        agg_param=f32(case.agg_param),
     )
 
 
@@ -779,6 +871,19 @@ def _make_run_one_moded(
                 preds=ctrl_preds,
             )
 
+        # The robustness axes: per-cell closures over traced fault/agg
+        # leaves, gated on the signature's STATIC family sets — absent
+        # families/aggregators trace nothing, fault-free and mean cells in a
+        # robust program ride exact-1.0 multiplies and where passthroughs
+        # (the bitwise contract; see faults.make_fault_fns).
+        fault_fns = faults.make_fault_fns(
+            cp.fault_kinds, cp.fault_onset, cp.fault_param,
+            sig.fault_kinds, params0, n_workers,
+        )
+        robust_sel = aggregation.make_robust_select(
+            cp.agg_kind, cp.agg_param, sig.agg_kinds
+        )
+
         prelude, tails = execmode.make_mode_prelude_and_tails(
             n_slots=n_workers,
             draw=draw,
@@ -788,6 +893,8 @@ def _make_run_one_moded(
             comm_time=comm_time,
             eta=cp.eta,
             ctrl_update=ctrl_update,
+            faults=fault_fns,
+            robust_agg=robust_sel,
         )
 
         if len(modes) == 1:
@@ -866,7 +973,16 @@ def _build_flat_program(
     # A sync-only signature compiles the lean program (no async carry, no
     # mode switch — byte-identical to the historical all-sync engine); any
     # async mode in the signature selects the unified ExecCarry program.
-    with_async = sig.modes != (execmode.MODE_SYNC,)
+    # Fault or robust-aggregation axes also route through the moded program
+    # (even all-sync): the transforms live in the shared execmode tails —
+    # ONE integration point for both engines — and the moded sync tail is
+    # already pinned bitwise-equal to the lean path, so the lean program
+    # stays byte-identical to today's for the grids that can use it.
+    with_moded = (
+        sig.modes != (execmode.MODE_SYNC,)
+        or bool(sig.fault_kinds)
+        or sig.agg_kinds != (aggregation.AGG_MEAN,)
+    )
 
     def make_run_one(params0, data):
         """run_one closing over (possibly device-local) data — built inside
@@ -877,7 +993,7 @@ def _build_flat_program(
         def mean_loss(params, n_active):
             return fns.eval_loss_active(params, n_active)
 
-        if with_async:
+        if with_moded:
             return _make_run_one_moded(
                 source, n_workers, params0, data,
                 grad_fn, mean_loss, sketch_dim, n_full, rem, eval_every, unroll,

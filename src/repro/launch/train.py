@@ -67,8 +67,16 @@ def _run_simulation(args):
     exponential fleet — a FRAC fraction of each cell's workers is FACTOR x
     slower — and ``--sim-drift T:SCALE`` adds a fleet-wide mid-run rate
     drift (every rate is multiplied by SCALE at simulated time T).
+    ``--sim-fault FAMILY:FRAC:ONSET[:PARAM]`` injects a per-worker fault
+    plan — a FRAC fraction of each cell's workers turns faulty (sign_flip /
+    rescale / random_gauss / crash) once simulated time reaches ONSET — and
+    ``--sim-agg`` picks the gradient aggregator (eq.-(2) weighted mean or a
+    robust alternative).  Comma lists sweep either as grid axes (labels get
+    ``|{fault}`` / ``|{agg}``), still in the same single dispatch.
     """
+    from repro.core.aggregation import AGG_KINDS
     from repro.core.execmode import MODES
+    from repro.core.faults import byzantine_plan
     from repro.core.straggler import Exponential, RateSchedule, WorkerFleet
     from repro.core.sweep import SweepCase, run_sweep, summarize_cells
     from repro.data import make_linreg_data
@@ -150,15 +158,62 @@ def _run_simulation(args):
                              f"options {sorted(MODES)}")
     if not modes:
         raise SystemExit("--sim-mode: need at least one mode")
+
+    # --sim-fault: each spec is FAMILY:FRAC:ONSET[:PARAM] or the literal
+    # "none" (the fault-free arm of a Byzantine sweep).
+    fault_specs = ([s for s in args.sim_fault.split(",") if s]
+                   if args.sim_fault else ["none"])
+    parsed_faults = []
+    for spec in fault_specs:
+        if spec == "none":
+            parsed_faults.append((spec, None))
+            continue
+        parts = spec.split(":")
+        if len(parts) not in (3, 4):
+            raise SystemExit(f"--sim-fault expects FAMILY:FRAC:ONSET[:PARAM] "
+                             f"or 'none', got {spec!r}")
+        try:
+            cfg = (parts[0], float(parts[1]), float(parts[2]),
+                   float(parts[3]) if len(parts) == 4 else 1.0)
+        except ValueError:
+            raise SystemExit(f"--sim-fault: bad numbers in {spec!r}")
+        parsed_faults.append((spec, cfg))
+
+    def make_plan(cfg, n):
+        if cfg is None:
+            return None
+        family, frac, onset, param = cfg
+        try:
+            return byzantine_plan(n, frac, family, onset=onset, param=param)
+        except ValueError as e:
+            raise SystemExit(f"--sim-fault: {e}")
+
+    aggs = [a for a in args.sim_agg.split(",") if a]
+    for a in aggs:
+        if a not in AGG_KINDS:
+            raise SystemExit(f"--sim-agg: unknown aggregator {a!r}; "
+                             f"options {sorted(AGG_KINDS)}")
+    if not aggs:
+        raise SystemExit("--sim-agg: need at least one aggregator")
+    if "kbatch" in modes and any(a != "mean" for a in aggs):
+        raise SystemExit("--sim-agg: robust aggregation is not supported in "
+                         "kbatch mode (drop kbatch from --sim-mode)")
+
     n_tag = lambda n: f"|n{n}" if len(n_values) > 1 else ""
     mode_tag = lambda mm: f"|{mm}" if len(modes) > 1 else ""
+    fault_tag = lambda ft: f"|{ft}" if len(parsed_faults) > 1 else ""
+    agg_tag = lambda a: f"|{a}" if len(aggs) > 1 else ""
     cases = [
         SweepCase(make_controller(cname, strag, n), strag, eta=eta, comm=comm,
-                  label=f"{cname}|{sname}{n_tag(n)}{mode_tag(mm)}", mode=mm)
+                  label=(f"{cname}|{sname}{n_tag(n)}{mode_tag(mm)}"
+                         f"{fault_tag(ftag)}{agg_tag(agg)}"),
+                  mode=mm, fault=make_plan(fcfg, n), agg=agg)
         for mm in modes
         for n in n_values
         for sname, strag in stragglers_for(n).items()
         for cname in ctrl_names
+        for ftag, fcfg in parsed_faults
+        for agg in aggs
     ]
     t0 = time.time()
     stats = summarize_cells(run_sweep(
@@ -261,6 +316,21 @@ def main(argv=None):
                          "kbatch}; a comma list sweeps mode as a grid axis "
                          "(async modes apply stale gradients, k = arrivals "
                          "per master update)")
+    ap.add_argument("--sim-fault", default=None,
+                    metavar="FAMILY:FRAC:ONSET[:PARAM]",
+                    help="simulate: per-worker fault plan — FRAC of each "
+                         "cell's workers turns faulty (family from "
+                         "{sign_flip,rescale,random_gauss,crash}) once "
+                         "sim time reaches ONSET; PARAM is the rescale "
+                         "factor / gauss scale (e.g. sign_flip:0.3:0). A "
+                         "comma list (entries may be 'none') sweeps the "
+                         "fault plan as a grid axis")
+    ap.add_argument("--sim-agg", default="mean", metavar="AGG[,AGG..]",
+                    help="simulate: gradient aggregator from {mean,trimmed,"
+                         "median,geomedian}; a comma list sweeps the "
+                         "aggregator as a grid axis (robust options "
+                         "aggregate per-worker gradient rows; not available "
+                         "with kbatch mode)")
     ap.add_argument("--sim-n-grid", default=None, metavar="N1,N2,...",
                     help="simulate: sweep the worker count as a grid axis; "
                          "cells are padded to the largest n (overrides "
