@@ -4,6 +4,7 @@ committed baseline (``BENCH_sweep.json`` at the repo root).
     python benchmarks/check_bench.py CURRENT BASELINE [--max-ratio 1.5]
                                      [--min-warm-speedup 1.0]
                                      [--min-async-speedup 5.0]
+                                     [--min-cold-cache-speedup 0]
 
 Three rules:
 
@@ -33,6 +34,24 @@ schema-checked — positive dispatch time, finite positive headline loss —
 so a broken figure run fails loudly.  A section that is present but EMPTY
 (``{}``) is a schema error, not an absence: an empty dict is what a failed
 merge leaves behind, and it must not pass as "section not run".
+
+**Cold-cache floor** (``--min-cold-cache-speedup``, default 0 = schema-only):
+the record's ``cold_cache`` section (two fresh subprocesses against one
+persistent compilation cache directory — see sweep_bench) must show the
+cached cold start loading every executable from disk
+(``cached_added_entries == 0``) and, when the first probe was a true cold
+miss, ``cold_uncached_s / cold_cached_s`` >= the floor.  When the directory
+arrived pre-warmed (CI's actions/cache restore: ``uncached_added_entries ==
+0``) the ratio is two cache hits and is not gated.  On full-grid (non-smoke)
+records the section must additionally satisfy ``cold_cached_s <
+sweep_s.cold`` — the acceptance criterion that a cache-hit cold start beats
+the in-process compile-paying cold dispatch.
+
+**Mesh-shape schema guard** (unconditional): any record whose ``n_devices``
+exceeds 1 but which lacks a well-formed 2-element ``mesh_shape`` is rejected
+— that footprint means a multi-device run predating (or dodging) the 2-D
+``(cells, replicas)`` dispatch schema, mirroring the empty-gated-section
+rule for partial migrations.
 
 File hygiene: the **repo-root** ``BENCH_sweep.json`` is the committed
 full-grid baseline; ``results/BENCH_sweep.json`` is scratch output of the
@@ -169,10 +188,91 @@ def byzantine_section_error(rec: dict) -> str | None:
     return None
 
 
+def mesh_shape_error(rec: dict, which: str = "current") -> str | None:
+    """Unconditional schema guard: a multi-device record without a
+    well-formed ``mesh_shape`` is a partial-migration footprint (a run
+    predating or dodging the 2-D (cells, replicas) dispatch schema) and is
+    rejected, mirroring the empty-gated-section rule."""
+    shape = rec.get("mesh_shape")
+    if shape is not None:
+        if (not isinstance(shape, list) or len(shape) != 2
+                or not all(isinstance(v, int) and not isinstance(v, bool)
+                           and v >= 1 for v in shape)):
+            return (f"{which} record's mesh_shape must be a 2-element list of "
+                    f"positive ints [cells, replicas], got {shape!r}")
+        return None
+    n_devices = rec.get("n_devices", 1)
+    if isinstance(n_devices, int) and n_devices > 1:
+        return (
+            f"{which} record has n_devices={n_devices} but no mesh_shape: "
+            "multi-device records must carry the 2-D (cells, replicas) "
+            "dispatch topology — regenerate with the current sweep_bench"
+        )
+    return None
+
+
+def cold_cache_error(
+    rec: dict, min_cold_cache_speedup: float = 0.0
+) -> str | None:
+    """Validate the ``cold_cache`` section (see module docstring).  With a
+    zero floor the section is optional but schema-checked when present;
+    with a positive floor it is required and the cached probe must be a
+    full disk hit (``cached_added_entries == 0``) with the uncached/cached
+    ratio at or above the floor (skipped when the directory arrived
+    pre-warmed).  Non-smoke records must also beat the in-process cold
+    dispatch: ``cold_cached_s < sweep_s.cold``."""
+    cc, err = _gated_section(rec, "cold_cache", {
+        "cold_uncached_s": (int, float), "cold_cached_s": (int, float),
+        "uncached_added_entries": int, "cached_added_entries": int,
+        "cache_dir_prewarmed": bool})
+    if err:
+        return err
+    if cc is None:
+        if min_cold_cache_speedup > 0:
+            return (
+                "cold_cache section is required (min-cold-cache-speedup "
+                f"{min_cold_cache_speedup}) but absent — run sweep_bench "
+                "without --skip-cold-probe"
+            )
+        return None
+    if cc["cold_cached_s"] <= 0 or cc["cold_uncached_s"] <= 0:
+        return (f"cold_cache times must be positive, got "
+                f"uncached={cc['cold_uncached_s']} cached={cc['cold_cached_s']}")
+    if cc["cached_added_entries"] != 0:
+        return (
+            f"cached cold-start probe COMPILED {cc['cached_added_entries']} "
+            "new executables (cached_added_entries != 0): the persistent "
+            "cache missed on an identical grid in a fresh process — the "
+            "disk-cache keying (GridSignature/cache_token -> traced HLO) "
+            "broke"
+        )
+    if min_cold_cache_speedup > 0 and cc["uncached_added_entries"] > 0:
+        ratio = cc["cold_uncached_s"] / cc["cold_cached_s"]
+        if ratio < min_cold_cache_speedup:
+            return (
+                f"warmed persistent cache only {ratio:.2f}x the uncached "
+                f"cold start ({cc['cold_cached_s']:.3f}s vs "
+                f"{cc['cold_uncached_s']:.3f}s; floor "
+                f"{min_cold_cache_speedup}x) — cache hits are not skipping "
+                "XLA compile"
+            )
+    if not rec.get("smoke"):
+        sweep_cold = rec.get("sweep_s", {}).get("cold", 0.0)
+        if sweep_cold and cc["cold_cached_s"] >= sweep_cold:
+            return (
+                f"full-grid record's cache-hit cold start "
+                f"({cc['cold_cached_s']:.3f}s) does not beat the in-process "
+                f"compile-paying cold dispatch (sweep_s.cold="
+                f"{sweep_cold:.3f}s) — the persistent cache buys nothing"
+            )
+    return None
+
+
 def check(
     current: dict, baseline: dict, max_ratio: float,
     min_async_speedup: float = 5.0,
     min_warm_speedup: float = 1.0,
+    min_cold_cache_speedup: float = 0.0,
 ) -> str | None:
     """Returns an error message, or None when the current record passes."""
     cur_warm = current["sweep_s"]["warm"]
@@ -222,6 +322,13 @@ def check(
     byz_err = byzantine_section_error(current)
     if byz_err:
         return byz_err
+    for rec, which in ((current, "current"), (baseline, "baseline")):
+        mesh_err = mesh_shape_error(rec, which)
+        if mesh_err:
+            return mesh_err
+    cc_err = cold_cache_error(current, min_cold_cache_speedup)
+    if cc_err:
+        return cc_err
     lm = current.get("lm")
     lm_note = (
         f"; lm grid {lm['cells']}x{lm['replicas']} in {lm['dispatch_s']:.1f}s "
@@ -233,12 +340,18 @@ def check(
         f"{byz['dispatch_s']:.1f}s (gm_b30={byz['final_excess_gm_b30']:.3g})"
         if byz else ""
     )
+    cc = current.get("cold_cache")
+    cc_note = (
+        f"; cold-cached {cc['cold_cached_s']:.2f}s vs uncached "
+        f"{cc['cold_uncached_s']:.2f}s (+{cc['cached_added_entries']} compiles)"
+        if cc else ""
+    )
     print(
         f"check_bench OK: warm {cur_warm:.3f}s vs baseline {base_warm:.3f}s "
         f"({ratio:.2f}x, {kind}, limit {max_ratio}x); warm sweep "
         f"{warm_speedup:.2f}x warm looped (floor {min_warm_speedup}x); "
         f"async engine {async_speedup:.0f}x host loop "
-        f"(floor {min_async_speedup}x){lm_note}{byz_note}"
+        f"(floor {min_async_speedup}x){lm_note}{byz_note}{cc_note}"
     )
     return None
 
@@ -258,6 +371,12 @@ def main():
     ap.add_argument("--min-async-speedup", type=float, default=5.0,
                     help="floor on async.speedup_per_update (engine vs "
                          "host loop); absolute, not baseline-relative")
+    ap.add_argument("--min-cold-cache-speedup", type=float, default=0.0,
+                    help="floor on cold_uncached_s / cold_cached_s in the "
+                         "cold_cache section (fresh-process persistent-cache "
+                         "hit vs miss); 0 = section optional, schema-checked "
+                         "only; > 0 also requires the section and "
+                         "cached_added_entries == 0")
     args = ap.parse_args()
     err = baseline_path_error(args.current, args.baseline)
     if err:
@@ -272,7 +391,7 @@ def main():
         print(f"check_bench WRONG FILES: {err}", file=sys.stderr)
         sys.exit(2)
     err = check(current, baseline, args.max_ratio, args.min_async_speedup,
-                args.min_warm_speedup)
+                args.min_warm_speedup, args.min_cold_cache_speedup)
     if err:
         print(f"check_bench FAIL: {err}", file=sys.stderr)
         sys.exit(1)

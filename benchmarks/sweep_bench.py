@@ -28,8 +28,22 @@ against the event-driven host-loop reference (``async_sim``) on the same
 problem — the number ``check_bench.py`` gates at >= 5x alongside the warm
 sweep-time rules.
 
+The ``cold_cache`` section measures what the persistent compilation cache
+(repro.core.cache) buys a production cold start: two FRESH subprocesses run
+the same cold sweep dispatch against one cache directory — the first
+populates it (``cold_uncached_s``), the second loads compiled executables
+from disk (``cold_cached_s``; ``cached_added_entries == 0`` is the
+compile-count-zero witness).  ``check_bench.py`` gates the ratio via
+``--min-cold-cache-speedup`` and requires ``cold_cached_s < sweep_s.cold``
+on full-grid records.  ``--cache-dir`` pins the directory (the CI
+cache-persistence lane restores it across workflow runs via actions/cache);
+the default is a throwaway temp dir so committed baselines always measure a
+true first-ever cold start.  ``--skip-cold-probe`` omits the section.
+
     PYTHONPATH=src python benchmarks/sweep_bench.py [--smoke] [--out PATH]
                                                     [--no-specialize]
+                                                    [--cache-dir DIR]
+                                                    [--skip-cold-probe]
 """
 
 from __future__ import annotations
@@ -37,6 +51,9 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import subprocess
+import sys
+import tempfile
 import time
 
 import jax
@@ -55,6 +72,7 @@ from repro.core.straggler import Bimodal, Exponential, Pareto
 from repro.core.sweep import SweepCase, clear_sweep_cache, grid_signature, run_sweep
 from repro.core.theory import SGDSystem, switching_times
 from repro.data import make_linreg_data
+from repro.launch import mesh as mesh_lib
 
 # Quickstart-scale cells (examples/quickstart.py): the sweep engine's target
 # workload is *many scenarios of moderate size*, where per-cell trace +
@@ -165,10 +183,91 @@ def async_engine_vs_host(iters: int, replicas: int, seed: int = 0) -> dict:
     }
 
 
+def cold_probe(smoke: bool, specialize: bool, cache_dir: str) -> None:
+    """``--cold-probe`` entry: ONE cold sweep dispatch of the bench grid in
+    THIS (expected fresh) process, with the persistent compilation cache
+    rooted at ``cache_dir``.  Prints a one-line JSON record — wall seconds
+    plus the cache-entry delta (the observable XLA compile count: 0 means
+    every executable loaded from disk) — and exits.  ``run()`` spawns this
+    twice against one directory to measure uncached-vs-cached cold start."""
+    from repro.core.cache import cache_entries, enable_persistent_cache
+
+    enable_persistent_cache(cache_dir)
+    entries_before = cache_entries(cache_dir)
+    iters = 200 if smoke else ITERS
+    replicas = 8 if smoke else REPLICAS
+    data = make_linreg_data(jax.random.PRNGKey(0), m=M, d=D)
+    L = 2 * float(jnp.linalg.eigvalsh(data.X.T @ data.X / M).max())
+    eta = 0.5 / L
+    w0 = jnp.zeros((D,))
+    keys = jax.random.split(jax.random.PRNGKey(1), replicas)
+    cases = _build_grid(data, eta, smoke)
+    t0 = time.perf_counter()
+    res = run_sweep(_loss, w0, data.X, data.y, n_workers=N, cases=cases,
+                    num_iters=iters, keys=keys, eval_every=EVAL_EVERY,
+                    specialize=specialize)
+    jax.block_until_ready(res.loss)
+    cold_s = time.perf_counter() - t0
+    print(json.dumps({
+        "cold_s": round(cold_s, 3),
+        "entries_before": entries_before,
+        "added_entries": cache_entries(cache_dir) - entries_before,
+    }))
+
+
+def _run_cold_probe(smoke: bool, specialize: bool, cache_dir: str) -> dict:
+    """Spawn ``--cold-probe`` as a FRESH python process (a true cold start:
+    no in-memory program cache, no jit cache, only the disk cache survives)
+    and parse its JSON line."""
+    cmd = [sys.executable, os.path.abspath(__file__),
+           "--cold-probe", "--cache-dir", cache_dir]
+    if smoke:
+        cmd.append("--smoke")
+    if not specialize:
+        cmd.append("--no-specialize")
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                       "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(cmd, capture_output=True, text=True, env=env, check=True)
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def measure_cold_cache(smoke: bool, specialize: bool, cache_dir: str | None) -> dict:
+    """The ``cold_cache`` record section: cold-start wall time without and
+    with a warmed persistent cache, via two fresh subprocesses sharing one
+    cache directory.  With ``cache_dir`` pinned (CI's actions/cache lane)
+    the directory may arrive pre-warmed — then the first probe already hits
+    (``uncached_added_entries == 0``) and the uncached-vs-cached ratio is
+    meaningless; ``check_bench.py`` skips the ratio gate in that case but
+    still enforces ``cached_added_entries == 0``."""
+    if cache_dir is None:
+        tmp = tempfile.TemporaryDirectory(prefix="repro-xla-cache-")
+        cache_dir, ctx = tmp.name, tmp
+    else:
+        os.makedirs(cache_dir, exist_ok=True)
+        ctx = None
+    try:
+        first = _run_cold_probe(smoke, specialize, cache_dir)
+        second = _run_cold_probe(smoke, specialize, cache_dir)
+    finally:
+        if ctx is not None:
+            ctx.cleanup()
+    return {
+        "cache_dir_prewarmed": first["entries_before"] > 0,
+        "cold_uncached_s": first["cold_s"],
+        "cold_cached_s": second["cold_s"],
+        "uncached_added_entries": first["added_entries"],
+        "cached_added_entries": second["added_entries"],
+    }
+
+
 def run(
     out_path: str = "results/BENCH_sweep.json",
     smoke: bool = False,
     specialize: bool = True,
+    cache_dir: str | None = None,
+    skip_cold_probe: bool = False,
 ):
     iters = 200 if smoke else ITERS
     replicas = 8 if smoke else REPLICAS
@@ -223,6 +322,10 @@ def run(
     unspec_warm = other_warm if specialize else sweep_warm
     async_rec = async_engine_vs_host(
         iters=200 if smoke else 2000, replicas=replicas)
+    cold_cache = (
+        None if skip_cold_probe
+        else measure_cold_cache(smoke, specialize, cache_dir)
+    )
 
     bitwise = all(
         np.array_equal(np.asarray(res.time[g]), np.asarray(r.time))
@@ -274,12 +377,27 @@ def run(
         "async": async_rec,
         "backend": jax.default_backend(),
         "n_devices": jax.local_device_count(),
+        # 2-D dispatch topology: the (cells, replicas) mesh shape the sweep
+        # resolves for this grid, and the process count it spans (1 unless
+        # jax.distributed is initialized).  check_bench rejects records
+        # with n_devices > 1 but no mesh_shape (partial migration).
+        "mesh_shape": list(mesh_lib.sweep_mesh_shape(
+            jax.device_count(), len(cases), replicas)),
+        "n_processes": jax.process_count(),
         "jax_version": jax.__version__,
     }
+    if cold_cache is not None:
+        # fresh-subprocess cold start, uncached vs warmed persistent cache
+        # (see module docstring); gated by check_bench --min-cold-cache-speedup.
+        record["cold_cache"] = cold_cache
     os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
     with open(out_path, "w") as f:
         json.dump(record, f, indent=2)
         f.write("\n")
+    cold_tag = (
+        f"cold_cached={cold_cache['cold_cached_s']:.2f}s;"
+        if cold_cache is not None else ""
+    )
     return {
         "name": "sweep_bench",
         "us_per_call": sweep_cold * 1e6,
@@ -289,6 +407,7 @@ def run(
                    f"speedup_warm={record['speedup_warm']:.2f}x;"
                    f"spec_vs_unspec={record['specialized']['specialization_speedup']:.2f}x;"
                    f"async_speedup={async_rec['speedup_per_update']:.0f}x;"
+                   f"{cold_tag}"
                    f"bitwise_equal={bitwise}",
     }
 
@@ -301,9 +420,25 @@ def main():
                     help="benchmark the fully-grid-agnostic (all-branch) "
                          "program as the main dispatch")
     ap.add_argument("--out", default="results/BENCH_sweep.json")
+    ap.add_argument("--cache-dir", default=None, metavar="DIR",
+                    help="persistent-cache directory for the cold-cache "
+                         "probes (default: a throwaway temp dir; CI pins "
+                         "this to an actions/cache-restored path)")
+    ap.add_argument("--skip-cold-probe", action="store_true",
+                    help="omit the cold_cache section (no subprocesses)")
+    ap.add_argument("--cold-probe", action="store_true",
+                    help="internal: run ONE cold dispatch in this process "
+                         "against --cache-dir and print its JSON line")
     args = ap.parse_args()
+    if args.cold_probe:
+        if not args.cache_dir:
+            raise SystemExit("--cold-probe requires --cache-dir")
+        cold_probe(smoke=args.smoke, specialize=not args.no_specialize,
+                   cache_dir=args.cache_dir)
+        return
     print(json.dumps(
-        run(args.out, smoke=args.smoke, specialize=not args.no_specialize),
+        run(args.out, smoke=args.smoke, specialize=not args.no_specialize,
+            cache_dir=args.cache_dir, skip_cold_probe=args.skip_cold_probe),
         indent=2,
     ))
 

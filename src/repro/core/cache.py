@@ -1,0 +1,117 @@
+"""Persistent (on-disk) XLA compilation cache: cold starts stop paying compile.
+
+The in-memory program caches (``montecarlo._PROGRAM_CACHE`` and the sweep
+engine's twin, keyed on ``GridSignature`` + ``source.cache_token()`` + static
+shapes) die with the process — a production cold start re-traces AND re-runs
+XLA for every program, which on the committed baseline grid is half the cold
+dispatch (BENCH_sweep.json: 14.4s cold vs 7.2s warm).  This module wires
+jax's persistent compilation cache behind an explicit opt-in so a fresh
+process loads compiled executables from disk instead.
+
+Key convention — how disk entries line up with the in-memory keys: jax keys
+the disk cache on a fingerprint of the *traced program* (HLO + compile
+options + backend/jax versions).  The sweep engine's traced program is a pure
+function of its in-memory cache key — ``(source.cache_token(), GridSignature,
+partition, mesh shape, static iteration/slot shapes)`` — plus the dispatch's
+array shapes/dtypes, so:
+
+* same grid signature + shapes in a fresh process  -> disk HIT (no XLA),
+* any change that would retrace in-process (new ``GridSignature``, different
+  ``cache_token``, new mesh shape) -> disk MISS, compiled exactly once, then
+  persisted for every later process.
+
+Tracing itself (python -> jaxpr) still runs per process — it is the XLA
+compile (the dominant cost) that the disk cache removes.  Entries are
+backend- and jax-version-scoped by jax's fingerprint, so one directory is
+safe to share across heterogeneous hosts; stale entries are simply never hit.
+
+Opt-in, never default: tests and benchmarks measure *uncached* compile unless
+they explicitly warm a directory, so enabling globally would corrupt the
+committed cold-start baselines.  ``benchmarks/sweep_bench.py --cold-probe``
+and tests/test_podscale.py drive this via fresh subprocesses.
+
+Usage::
+
+    from repro.core import cache
+    cache.enable_persistent_cache("/var/cache/repro-xla")   # or
+    cache.maybe_enable_from_env()   # REPRO_COMPILATION_CACHE_DIR
+
+    # CLI: python -m repro.launch.train --cache-dir /var/cache/repro-xla
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+__all__ = [
+    "enable_persistent_cache",
+    "disable_persistent_cache",
+    "persistent_cache_dir",
+    "cache_entries",
+    "maybe_enable_from_env",
+    "ENV_VAR",
+]
+
+# Environment opt-in consumed by maybe_enable_from_env() (train.py calls it,
+# and subprocess tests use it to enable caching without code changes).
+ENV_VAR = "REPRO_COMPILATION_CACHE_DIR"
+
+
+def enable_persistent_cache(cache_dir: str) -> str:
+    """Enable jax's on-disk compilation cache rooted at ``cache_dir``.
+
+    Creates the directory if needed and removes jax's default size/time
+    floors (min entry size, min compile seconds) so EVERY executable
+    persists — the sweep grids this repo compiles are seconds-scale
+    programs, but the floors would silently skip the small auxiliary
+    executables (eval reshapes, summaries) and leave a fresh process still
+    paying a compile.  Also enables the XLA-level sub-caches (autotune
+    results etc.) where the backend supports them.
+
+    Idempotent; returns the (absolute) cache directory.
+    """
+    cache_dir = os.path.abspath(cache_dir)
+    os.makedirs(cache_dir, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", cache_dir)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+    jax.config.update("jax_persistent_cache_enable_xla_caches", "all")
+    return cache_dir
+
+
+def disable_persistent_cache() -> None:
+    """Turn the on-disk cache back off (in-memory caches are untouched)."""
+    jax.config.update("jax_compilation_cache_dir", None)
+
+
+def persistent_cache_dir() -> Optional[str]:
+    """The active cache directory, or None when disk caching is off."""
+    return jax.config.jax_compilation_cache_dir
+
+
+def cache_entries(cache_dir: Optional[str] = None) -> int:
+    """Number of persisted entries (files) under ``cache_dir`` (default: the
+    active directory).  The entry *delta* across a run is the observable
+    compile count: a fully-warmed process adds exactly 0, a changed
+    ``GridSignature`` adds exactly the newly-compiled executables."""
+    if cache_dir is None:
+        cache_dir = persistent_cache_dir()
+    if cache_dir is None or not os.path.isdir(cache_dir):
+        return 0
+    n = 0
+    for _, _, files in os.walk(cache_dir):
+        n += len(files)
+    return n
+
+
+def maybe_enable_from_env() -> Optional[str]:
+    """Enable the cache iff ``REPRO_COMPILATION_CACHE_DIR`` is set (and
+    non-empty); returns the directory or None.  The launcher calls this so
+    deployments opt in via environment without touching code."""
+    cache_dir = os.environ.get(ENV_VAR, "")
+    if not cache_dir:
+        return None
+    return enable_persistent_cache(cache_dir)

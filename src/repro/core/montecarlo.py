@@ -57,6 +57,7 @@ import collections
 import dataclasses
 import inspect
 import math
+import os
 from typing import Callable, NamedTuple
 
 import jax
@@ -81,6 +82,8 @@ __all__ = [
     "summarize",
     "program_cache_stats",
     "clear_program_cache",
+    "set_program_cache_size",
+    "program_cache_size",
 ]
 
 _Z95 = 1.959963984540054  # two-sided 95% normal quantile
@@ -170,9 +173,52 @@ class _LRUProgramCache:
     def clear(self):
         self._entries.clear()
 
+    def resize(self, maxsize: int):
+        """Set ``maxsize``, evicting least-recently-used entries down to it."""
+        if maxsize < 1:
+            raise ValueError(f"program cache maxsize must be >= 1, got {maxsize}")
+        self.maxsize = maxsize
+        while len(self._entries) > self.maxsize:
+            self._entries.popitem(last=False)
+
+
+def _default_program_cache_size() -> int:
+    """Default program-cache capacity: ``REPRO_PROGRAM_CACHE_SIZE`` if set
+    (read at import, shared by both engines), else 32."""
+    raw = os.environ.get("REPRO_PROGRAM_CACHE_SIZE", "")
+    if not raw:
+        return 32
+    try:
+        size = int(raw)
+    except ValueError:
+        raise ValueError(
+            f"REPRO_PROGRAM_CACHE_SIZE={raw!r} is not an integer"
+        ) from None
+    if size < 1:
+        raise ValueError(f"REPRO_PROGRAM_CACHE_SIZE must be >= 1, got {size}")
+    return size
+
+
+def set_program_cache_size(maxsize: int) -> None:
+    """Resize the compiled-program caches of BOTH engines (this module's and
+    repro.core.sweep's), evicting LRU entries past the new capacity.  An
+    evicted configuration retraces exactly once on re-entry — arithmetic is
+    never affected, only trace count (tests/test_program_cache.py)."""
+    import sys
+
+    _PROGRAM_CACHE.resize(maxsize)
+    sweep = sys.modules.get("repro.core.sweep")
+    if sweep is not None:  # lazy: sweep imports this module, not vice versa
+        sweep._PROGRAM_CACHE.resize(maxsize)
+
+
+def program_cache_size() -> int:
+    """Current capacity of the looped engine's program cache."""
+    return _PROGRAM_CACHE.maxsize
+
 
 # config-key -> jitted (params0, data, keys) -> (times, losses, ks).
-_PROGRAM_CACHE = _LRUProgramCache(maxsize=32)
+_PROGRAM_CACHE = _LRUProgramCache(maxsize=_default_program_cache_size())
 # Incremented inside the traced function body, i.e. once per actual trace.
 # Tests assert a second identical call leaves this unchanged.
 _N_TRACES = 0

@@ -39,10 +39,20 @@ grid repopulates with zero retraces, at the all-branches cost.  (The
 straggler family set is deliberately never specialized — see
 ``GridSignature``.)
 
-The flattened grid x replica axis is sharded across all local devices via
-``jax.sharding.NamedSharding`` over a 1-D ``Mesh`` (with a ``shard_map``
-fallback path), so the engine scales with hardware; on a single device both
-paths degenerate to the plain vmap.
+The grid is dispatched over a 2-D ``("cells", "replicas")`` device mesh:
+each axis pads to its mesh-axis multiple (cells with inert empty rows,
+replicas by repeating a key), the padded grid flattens cell-major into ONE
+lane axis, and that axis is sharded over both mesh axes — so a grid
+smaller than the device count still occupies every device (a 15-cell x
+32-replica grid fills a 480-device slice: the replica axis shards too),
+and the mesh spans *processes* whenever ``jax.distributed`` is initialized
+(``launch.mesh.make_sweep_mesh`` builds it over global devices;
+``shardctx.sweep_mesh`` or the ``mesh=`` argument override it).  The
+traced program stays the historical single-vmap flat program — the mesh
+decides placement, never arithmetic.  Inputs are placed with
+``jax.sharding.NamedSharding`` and XLA propagation partitions the program
+(with a ``shard_map`` fallback path); on a single device both paths
+degenerate to the plain vmap.
 
 Bitwise fidelity: every cell's trajectories are bitwise-equal to what a
 looped ``run_monte_carlo`` call produces for the same PRNG keys.  The
@@ -86,7 +96,12 @@ from repro.core.controller import (
     _tree_zeros_like,
 )
 from repro.core.gradsource import GradSource, PerExampleSource
-from repro.core.montecarlo import MonteCarloResult, _LRUProgramCache, summarize
+from repro.core.montecarlo import (
+    MonteCarloResult,
+    _LRUProgramCache,
+    _default_program_cache_size,
+    summarize,
+)
 from repro.core.straggler import (
     StragglerModel,
     WorkerFleet,
@@ -108,6 +123,7 @@ __all__ = [
     "product_cases",
     "sweep_cache_stats",
     "clear_sweep_cache",
+    "dispatch_donation",
 ]
 
 # Controller kinds — lax.switch branch indices for the unified update.
@@ -938,13 +954,16 @@ def _make_run_one_moded(
 
 
 # (source.cache_token(), n_workers, num_iters, eval_every, unroll,
-#  n_switch_slots, n_sched_slots, sketch_dim, partition, ndev, GridSignature)
-# -> jitted flat program.  Jit's own cache handles shapes (grid size,
-# params/data shapes) under each entry; the signature key is what makes
-# same-signature grid repopulation a cache hit and a new signature exactly
-# one new trace.  Bounded LRU (shared implementation with montecarlo):
-# eviction + re-entry retraces exactly once.
-_PROGRAM_CACHE = _LRUProgramCache(maxsize=32)
+#  n_switch_slots, n_sched_slots, sketch_dim, partition, (mc, mr, n_proc),
+#  GridSignature) -> jitted grid program.  Jit's own cache handles shapes
+# (grid size, params/data shapes) under each entry; the signature key is
+# what makes same-signature grid repopulation a cache hit and a new
+# signature exactly one new trace.  Bounded LRU (shared implementation with
+# montecarlo, REPRO_PROGRAM_CACHE_SIZE-sized): eviction + re-entry retraces
+# exactly once.  The same key components determine the traced HLO, which is
+# what jax's persistent compilation cache fingerprints — see
+# repro.core.cache for the on-disk story.
+_PROGRAM_CACHE = _LRUProgramCache(maxsize=_default_program_cache_size())
 _N_TRACES = 0
 
 
@@ -958,7 +977,17 @@ def clear_sweep_cache() -> None:
     _N_TRACES = 0
 
 
-def _build_flat_program(
+def dispatch_donation() -> tuple:
+    """The ``donate_argnums`` the sweep dispatch requests for its freshly
+    materialized (never caller-owned) cell-leaf and key buffers — argument
+    positions 2 and 3 of the grid program, on BOTH the auto and shard_map
+    paths.  CPU XLA has no donation support (it would warn and ignore), so
+    only accelerator backends request it; the GPU CI lane asserts this is
+    non-empty off-CPU."""
+    return (2, 3) if jax.default_backend() in ("gpu", "tpu") else ()
+
+
+def _build_grid_program(
     source: GradSource,
     n_workers: int,
     num_iters: int,
@@ -1066,7 +1095,18 @@ def _build_flat_program(
 
         return run_one
 
-    def run_flat(params0, data, cells: _CellParams, keys):
+    # The traced program vmaps ONCE over the flattened (Gp*Rp,) lane axis —
+    # deliberately NOT vmap(vmap(...)) over (cells, replicas): nesting the
+    # batch axes changes XLA CPU's fusion choices at last-ulp level in the
+    # larger graphs (mixed-mode switch, hetero fleets, LM losses), breaking
+    # the sweep-vs-looped bitwise contract.  The 2-D mesh lives entirely in
+    # the DATA layout: the flat lane axis is sharded over BOTH mesh axes
+    # (cell-major lane order, so a ("cells", "replicas") split assigns each
+    # device a contiguous lane block), and the arithmetic per lane is the
+    # historical single-vmap program, bit for bit.
+    flat_spec = P(("cells", "replicas"))
+
+    def run_grid(params0, data, cells: _CellParams, keys):
         global _N_TRACES
         _N_TRACES += 1
         if partition == "shard_map":
@@ -1081,22 +1121,21 @@ def _build_flat_program(
                 in_specs=(
                     jax.tree.map(lambda _: P(), params0),
                     jax.tree.map(lambda _: P(), data),
-                    jax.tree.map(lambda _: P("cells"), cells),
-                    P("cells"),
+                    jax.tree.map(lambda _: flat_spec, cells),
+                    flat_spec,
                 ),
-                out_specs=P("cells"),
+                out_specs=flat_spec,
                 check_rep=False,
             )
             return sharded(params0, data, cells, keys)
         return jax.vmap(make_run_one(params0, data))(cells, keys)
 
-    # The flat cell-leaf and key buffers are freshly materialized inside
-    # every run_sweep dispatch (never caller-owned), so donating them lets
-    # XLA reuse their allocations for the scan carries/outputs instead of
-    # holding both live across the call.  CPU XLA has no donation support
-    # (it would warn and ignore), so only accelerator backends request it.
-    donate = (2, 3) if jax.default_backend() in ("gpu", "tpu") else ()
-    return jax.jit(run_flat, donate_argnums=donate)
+    # The cell-leaf and key buffers are freshly materialized inside every
+    # run_sweep dispatch (never caller-owned), so donating them lets XLA
+    # reuse their allocations for the scan carries/outputs instead of
+    # holding both live across the call — on the auto AND shard_map paths
+    # (the jit wraps both).
+    return jax.jit(run_grid, donate_argnums=dispatch_donation())
 
 
 def run_sweep_source(
@@ -1115,6 +1154,7 @@ def run_sweep_source(
     n_sched_slots: int | None = None,
     partition: str = "auto",
     specialize: bool = True,
+    mesh: Mesh | None = None,
 ) -> SweepResult:
     """Run a G-cell x R-replica grid of fastest-k SGD as ONE jitted dispatch.
 
@@ -1155,19 +1195,36 @@ def run_sweep_source(
     can afford deeper unrolling.  Unroll never affects the arithmetic —
     trajectories are bitwise-identical across unroll values.
 
-    ``partition`` chooses how the flattened (G*R,) axis is laid out across
-    local devices:
+    ``partition`` chooses how the (G, R) grid is laid out across the 2-D
+    ``("cells", "replicas")`` device mesh (the padded grid flattens
+    cell-major into one lane axis sharded over BOTH mesh axes — the traced
+    program stays the historical single-vmap flat program, so the mesh
+    affects placement, never arithmetic):
 
-    * ``"auto"`` — inputs are placed with ``NamedSharding`` over a 1-D device
-      mesh and XLA's sharding propagation partitions the whole program (the
-      default; degenerates to plain vmap on one device);
+    * ``"auto"`` — inputs are placed with ``NamedSharding`` and XLA's
+      sharding propagation partitions the whole program (the default;
+      degenerates to plain vmap on one device);
     * ``"shard_map"`` — explicit per-device blocks via
       ``jax.experimental.shard_map`` (fallback for backends where automatic
       propagation misbehaves);
     * ``"none"`` — no device placement (single-device debugging).
 
-    The flat axis is padded to a device-count multiple by repeating cell 0
-    and the padding is dropped before results are returned.
+    ``mesh`` resolution (ignored under ``"none"``): the explicit argument
+    wins, else an ambient ``repro.shardctx.sweep_mesh`` context, else
+    ``repro.launch.mesh.make_sweep_mesh(G, R)`` — a mesh over **global**
+    devices, which spans processes whenever ``jax.distributed`` is
+    initialized (every participating process must make the identical call,
+    the usual jax SPMD contract; placement materializes only each process's
+    addressable shards).  The mesh must carry axes ``("cells",
+    "replicas")``.
+
+    Each grid axis is padded to its mesh-axis multiple and the padding is
+    dropped before results are returned: the cell axis with *empty*
+    all-zero parameter rows (inert lanes — never gathered copies of a real
+    cell, so padding cannot amplify real compute) and the replica axis by
+    repeating key 0.  Mesh shape never affects values: results are
+    bitwise-identical across every mesh shape and both dispatch paths
+    (tests/test_podscale.py pins this).
 
     Every cell (g, r) is bitwise-equal to
     ``run_monte_carlo(..., controller=cases[g].controller, ...)``'s replica r
@@ -1241,26 +1298,66 @@ def run_sweep_source(
     ]
     stacked = jax.tree.map(lambda *xs: np.stack(xs), *cells_np)
 
-    devices = jax.local_devices()
-    ndev = len(devices) if partition != "none" else 1
-    flat_n = G * R
-    pad = (-flat_n) % ndev
-    # flat lane f <- (cell cell_idx[f], replica rep_idx[f]); padding repeats
-    # lane 0 so every device gets a full block, then gets sliced off.
-    cell_idx = np.concatenate([np.repeat(np.arange(G), R), np.zeros(pad, np.int64)])
-    rep_idx = np.concatenate([np.tile(np.arange(R), G), np.zeros(pad, np.int64)])
-    flat_cells = jax.tree.map(lambda a: jnp.asarray(a)[cell_idx], stacked)
-    flat_keys = keys[rep_idx]
+    if partition == "none":
+        mesh = None
+        mc = mr = n_proc = 1
+    else:
+        if mesh is None:
+            from repro import shardctx
 
-    mesh = None
-    if partition != "none":
-        mesh = Mesh(np.asarray(devices), ("cells",))
-        batched = NamedSharding(mesh, P("cells"))
+            mesh = shardctx.current_sweep_mesh()
+        if mesh is None:
+            from repro.launch import mesh as mesh_lib
+
+            mesh = mesh_lib.make_sweep_mesh(G, R)
+        if tuple(mesh.axis_names) != ("cells", "replicas"):
+            raise ValueError(
+                "sweep mesh must have axes ('cells', 'replicas'), got "
+                f"{tuple(mesh.axis_names)}"
+            )
+        mc, mr = mesh.shape["cells"], mesh.shape["replicas"]
+        n_proc = jax.process_count()
+
+    # Pad each grid axis to its mesh-axis multiple; padded lanes are sliced
+    # off before results are returned.  Cells pad with EMPTY all-zero
+    # parameter rows (inert: zero-rate samplers draw +inf, n_active=0 holds
+    # all data out — and any junk they compute stays confined to their own
+    # lanes, there is no cross-lane arithmetic — never gathered copies of a
+    # real cell, so padding can't amplify real compute); replicas pad by
+    # repeating key 0.  The padded (Gp, Rp) grid then flattens CELL-MAJOR
+    # into the (Gp*Rp,) lane axis the program vmaps over, so sharding that
+    # one axis over ("cells", "replicas") hands each device a contiguous
+    # equal lane block.
+    Gp, Rp = G + (-G) % mc, R + (-R) % mr
+    padded_cells = jax.tree.map(
+        lambda a: np.concatenate(
+            [np.asarray(a), np.zeros((Gp - G,) + a.shape[1:], a.dtype)]
+        )
+        if Gp > G
+        else np.asarray(a),
+        stacked,
+    )
+    padded_keys = (
+        keys[np.concatenate([np.arange(R), np.zeros(Rp - R, np.int64)])]
+        if Rp > R
+        else keys
+    )
+    cell_idx = np.repeat(np.arange(Gp), Rp)
+    rep_idx = np.tile(np.arange(Rp), Gp)
+    flat_cells = jax.tree.map(lambda a: jnp.asarray(a)[cell_idx], padded_cells)
+    flat_keys = padded_keys[rep_idx]
+
+    if mesh is not None:
+        from repro.launch.sharding import place_spanning
+
+        lane_sharding = NamedSharding(mesh, P(("cells", "replicas")))
         replicated = NamedSharding(mesh, P())
-        flat_cells = jax.device_put(flat_cells, batched)
-        flat_keys = jax.device_put(flat_keys, batched)
-        params0 = jax.device_put(params0, replicated)
-        data = jax.device_put(data, replicated)
+        flat_cells = jax.tree.map(
+            lambda a: place_spanning(a, lane_sharding), flat_cells
+        )
+        flat_keys = place_spanning(flat_keys, lane_sharding)
+        params0 = jax.tree.map(lambda a: place_spanning(a, replicated), params0)
+        data = jax.tree.map(lambda a: place_spanning(a, replicated), data)
 
     cache_key = (
         source.cache_token(),
@@ -1272,12 +1369,12 @@ def run_sweep_source(
         int(n_sched_slots),
         int(sketch_dim),
         partition,
-        ndev,
+        (mc, mr, n_proc),
         sig,
     )
     program = _PROGRAM_CACHE.get(cache_key)
     if program is None:
-        program = _build_flat_program(
+        program = _build_grid_program(
             source, n_workers, num_iters, eval_every, unroll,
             sketch_dim, partition, mesh, sig,
         )
@@ -1286,7 +1383,7 @@ def run_sweep_source(
 
     n_evals = times.shape[1]
     times, losses, ks = (
-        a[:flat_n].reshape(G, R, n_evals) for a in (times, losses, ks)
+        a.reshape(Gp, Rp, n_evals)[:G, :R] for a in (times, losses, ks)
     )
     iteration = np.minimum(
         np.arange(1, n_evals + 1) * eval_every, num_iters
@@ -1317,6 +1414,7 @@ def run_sweep(
     n_sched_slots: int | None = None,
     partition: str = "auto",
     specialize: bool = True,
+    mesh: Mesh | None = None,
 ) -> SweepResult:
     """The historical per-example entry point: a thin wrapper over
     ``run_sweep_source`` with the reference ``PerExampleSource`` and
@@ -1338,4 +1436,5 @@ def run_sweep(
         n_sched_slots=n_sched_slots,
         partition=partition,
         specialize=specialize,
+        mesh=mesh,
     )

@@ -226,7 +226,11 @@ def _run_simulation(args):
     print(json.dumps({
         "grid_cells": len(cases), "replicas": args.replicas,
         "iters": args.steps, "dispatches": 1,
-        "devices": jax.local_device_count(), "wall_s": round(wall, 2),
+        "devices": jax.device_count(),
+        "processes": jax.process_count(),
+        "mesh_shape": list(mesh_lib.sweep_mesh_shape(
+            jax.device_count(), len(cases), args.replicas)),
+        "wall_s": round(wall, 2),
     }))
     for label, s in stats.items():
         print(json.dumps({
@@ -344,7 +348,30 @@ def main(argv=None):
     ap.add_argument("--sim-eval-every", type=int, default=500)
     ap.add_argument("--sim-csv", default=None,
                     help="simulate: write per-cell trajectories to this CSV")
+    ap.add_argument("--distributed", action="store_true",
+                    help="initialize jax.distributed (multi-process SPMD): "
+                         "meshes — the production LM mesh and the sweep "
+                         "engine's (cells, replicas) mesh alike — then span "
+                         "every process's devices; coordinator/rank come "
+                         "from the cluster environment")
+    ap.add_argument("--cache-dir", default=None, metavar="DIR",
+                    help="persistent XLA compilation cache directory "
+                         "(repro.core.cache): cold starts load compiled "
+                         "executables from disk instead of re-running XLA; "
+                         "also honored via REPRO_COMPILATION_CACHE_DIR")
     args = ap.parse_args(argv)
+
+    # Both must happen before anything touches jax device state or compiles:
+    # distributed init defines the global device set every mesh spans, and
+    # the cache config must be live before the first jit dispatch persists.
+    if args.distributed:
+        jax.distributed.initialize()
+    from repro.core import cache as cache_lib
+
+    if args.cache_dir:
+        cache_lib.enable_persistent_cache(args.cache_dir)
+    else:
+        cache_lib.maybe_enable_from_env()
 
     if args.simulate:
         return _run_simulation(args)

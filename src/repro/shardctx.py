@@ -49,6 +49,31 @@ def constrain(x: jax.Array, *logical: str) -> jax.Array:
     return jax.lax.with_sharding_constraint(x, spec)
 
 
+def current_sweep_mesh() -> Optional[jax.sharding.Mesh]:
+    """The 2-D sweep mesh installed by ``sweep_mesh`` (None when unset)."""
+    return getattr(_STATE, "sweep_mesh", None)
+
+
+@contextlib.contextmanager
+def sweep_mesh(mesh: jax.sharding.Mesh):
+    """Install a ``("cells", "replicas")`` mesh for every ``run_sweep`` /
+    ``run_sweep_source`` dispatch in the dynamic extent — the same
+    context-not-argument pattern as ``activation_sharding``, so launch code
+    (sim and LM paths alike) pins the dispatch mesh without threading a
+    parameter through every call site.  An explicit ``mesh=`` argument to
+    the sweep entry points still wins over the context."""
+    if tuple(mesh.axis_names) != ("cells", "replicas"):
+        raise ValueError(
+            f"sweep mesh must have axes ('cells', 'replicas'), got {mesh.axis_names}"
+        )
+    prev = current_sweep_mesh()
+    _STATE.sweep_mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _STATE.sweep_mesh = prev
+
+
 def constrain_alt(x: jax.Array, *alternatives: Tuple[str, ...]) -> jax.Array:
     """Constrain with the FIRST alternative whose every non-'none' dim is
     satisfiable (divisible by its mesh extent); no-op if none fits.

@@ -16,6 +16,7 @@ contract pinned here:
 
 import jax
 import jax.numpy as jnp
+import pytest
 
 from repro.core import montecarlo as mc
 from repro.core import sweep as sw
@@ -59,6 +60,81 @@ def test_lru_overwrite_does_not_grow():
     cache["b"] = 2
     assert len(cache) == 2
     assert cache.get("a") == 10
+
+
+# ------------------------------------------------- capacity configuration
+
+
+def test_resize_validates_and_evicts_lru_down():
+    cache = _LRUProgramCache(maxsize=4)
+    for k in "abcd":
+        cache[k] = k
+    assert cache.get("a") == "a"  # refresh: 'b' is now LRU
+    cache.resize(2)
+    assert len(cache) == 2
+    assert cache.get("a") == "a" and cache.get("d") == "d"
+    assert cache.get("b") is None and cache.get("c") is None
+    with pytest.raises(ValueError, match="maxsize"):
+        cache.resize(0)
+
+
+def test_default_program_cache_size_env_var(monkeypatch):
+    monkeypatch.delenv("REPRO_PROGRAM_CACHE_SIZE", raising=False)
+    assert mc._default_program_cache_size() == 32
+    monkeypatch.setenv("REPRO_PROGRAM_CACHE_SIZE", "7")
+    assert mc._default_program_cache_size() == 7
+    monkeypatch.setenv("REPRO_PROGRAM_CACHE_SIZE", "zero")
+    with pytest.raises(ValueError, match="not an integer"):
+        mc._default_program_cache_size()
+    monkeypatch.setenv("REPRO_PROGRAM_CACHE_SIZE", "0")
+    with pytest.raises(ValueError, match=">= 1"):
+        mc._default_program_cache_size()
+
+
+def test_set_program_cache_size_resizes_both_engines():
+    prev = mc.program_cache_size()
+    try:
+        mc.set_program_cache_size(5)
+        assert mc.program_cache_size() == 5
+        assert mc._PROGRAM_CACHE.maxsize == 5
+        assert sw._PROGRAM_CACHE.maxsize == 5
+        with pytest.raises(ValueError, match="maxsize"):
+            mc.set_program_cache_size(0)
+    finally:
+        mc.set_program_cache_size(prev)
+
+
+def test_sweep_capacity_one_retraces_exactly_once_per_signature():
+    """At maxsize=1 two alternating grid signatures each evict the other, so
+    a re-entry retraces exactly once — never more (no thrash-amplification),
+    never less (the evicted executable really is gone)."""
+    data = _data()
+    cases = [SweepCase(FixedKController(n_workers=N, k=1),
+                       Exponential(rate=1.0), eta=0.01)]
+    sw.clear_sweep_cache()
+    prev = mc.program_cache_size()
+    mc.set_program_cache_size(1)
+    try:
+        def run(num_iters):
+            return run_sweep(
+                _loss, jnp.zeros((D,)), data.X, data.y, n_workers=N,
+                cases=cases, num_iters=num_iters,
+                key=jax.random.PRNGKey(2), n_replicas=1, eval_every=5,
+            )
+
+        run(4)
+        assert sw.sweep_cache_stats() == {"programs": 1, "traces": 1}
+        run(4)  # resident: zero retraces
+        assert sw.sweep_cache_stats()["traces"] == 1
+        run(5)  # evicts 4
+        assert sw.sweep_cache_stats() == {"programs": 1, "traces": 2}
+        run(4)  # exactly one retrace to come back
+        assert sw.sweep_cache_stats() == {"programs": 1, "traces": 3}
+        run(4)
+        assert sw.sweep_cache_stats()["traces"] == 3
+    finally:
+        mc.set_program_cache_size(prev)
+        sw.clear_sweep_cache()
 
 
 # ------------------------------------------------- monte-carlo engine
